@@ -1,0 +1,55 @@
+"""Paper Table III: kernel-mode ablation.
+
+GLU3.0 adapts execution per level (flat / segmented / panel + scan fusion).
+Case 1 disables the flat (type-A) path, Case 2 disables the panel/stream
+(type-C) path, Case 3 disables scan fusion entirely (the CUDA-streams
+analogue).  Level-type distribution (A/B/C) is reported like the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_matrices, row, timeit
+
+
+def main():
+    import jax.numpy as jnp
+
+    from repro.core import JaxFactorizer, build_plan, levelize_relaxed, symbolic_fillin
+    from repro.core.plan import MODE_FLAT, MODE_PANEL, MODE_SEGMENTED
+
+    print("# table_III: matrix,glu3_ms,case1_noflat_ms,case2_nopanel_ms,"
+          "case3_nofuse_ms,levels_A,levels_B,levels_C")
+    out = []
+    for name, A in bench_matrices():
+        As = symbolic_fillin(A, "auto")
+        lv = levelize_relaxed(As)
+        plan = build_plan(As, lv)
+        a_data = np.asarray(A.data)
+        counts = {MODE_FLAT: 0, MODE_SEGMENTED: 0, MODE_PANEL: 0}
+        for s in plan.segments:
+            counts[s.mode] += 1
+
+        variants = {
+            "glu3": dict(),
+            "case1_noflat": dict(disable_modes=(MODE_FLAT,)),
+            "case2_nopanel": dict(disable_modes=(MODE_PANEL,)),
+            "case3_nofuse": dict(fuse_levels=False),
+        }
+        times = {}
+        for vname, kw in variants.items():
+            fx = JaxFactorizer(plan, dtype=jnp.float64, **kw)
+            t, _ = timeit(lambda fx=fx: fx.factorize(a_data).block_until_ready())
+            times[vname] = t * 1e3
+        line = (f"{name},{times['glu3']:.1f},{times['case1_noflat']:.1f},"
+                f"{times['case2_nopanel']:.1f},{times['case3_nofuse']:.1f},"
+                f"{counts[MODE_FLAT]},{counts[MODE_SEGMENTED]},{counts[MODE_PANEL]}")
+        print(line, flush=True)
+        row(f"modes_{name}", times["glu3"] * 1e3,
+            f"nofuse_slowdown={times['case3_nofuse']/times['glu3']:.2f}x")
+        out.append({"matrix": name, **times, "counts": counts})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 12: panel ("stream") mode threshold sweep.
+
+The paper found N=16 optimal for when stream mode engages; we sweep the
+panel_threshold of the plan's mode chooser the same way.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_matrices, row, timeit
+
+
+def main():
+    import jax.numpy as jnp
+
+    from repro.core import JaxFactorizer, build_plan, levelize_relaxed, symbolic_fillin
+
+    thresholds = [5, 8, 16, 32, 64]
+    print("# fig12: matrix," + ",".join(f"N{t}_ms" for t in thresholds))
+    out = []
+    for name, A in bench_matrices():
+        As = symbolic_fillin(A, "auto")
+        lv = levelize_relaxed(As)
+        a_data = np.asarray(A.data)
+        times = []
+        for th in thresholds:
+            plan = build_plan(As, lv, panel_threshold=th)
+            fx = JaxFactorizer(plan, dtype=jnp.float64)
+            t, _ = timeit(lambda fx=fx: fx.factorize(a_data).block_until_ready())
+            times.append(t * 1e3)
+        print(f"{name}," + ",".join(f"{t:.1f}" for t in times), flush=True)
+        best = thresholds[int(np.argmin(times))]
+        row(f"threshold_{name}", min(times) * 1e3, f"best_N={best}")
+        out.append({"matrix": name, "thresholds": thresholds, "times_ms": times})
+    return out
+
+
+if __name__ == "__main__":
+    main()

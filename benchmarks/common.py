@@ -1,0 +1,55 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+# Benchmark matrix suite — sizes chosen so the full harness finishes on one
+# CPU core; pass REPRO_BENCH_SCALE to grow toward paper-scale matrices.
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+BENCH_MATRICES = [
+    ("rajat12_like", 1.0),
+    ("circuit_2_like", 0.5),
+    ("grid64", 0.5),
+    ("memplus_like", 0.1),
+    ("asic_like_10k", 0.15),
+]
+
+
+def bench_matrices():
+    """Suite matrices AFTER the paper's preprocessing (MC64 + fill-reducing
+    ordering, Fig. 5) — levelization/factorization benchmarks measure the
+    numeric phase on realistically-ordered patterns, as the paper does."""
+    from repro.core import fill_reducing_ordering, zero_free_diagonal
+    from repro.sparse import make_suite_matrix
+
+    for name, s in BENCH_MATRICES:
+        A = make_suite_matrix(name, scale=s * SCALE)
+        rp = zero_free_diagonal(A)
+        A = A.permute(rp, np.arange(A.n, dtype=np.int64))
+        perm = fill_reducing_ordering(A, "auto")
+        yield name, A.permute(perm, perm)

@@ -1,0 +1,35 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+
+def main() -> None:
+    from . import (
+        bench_factorization,
+        bench_level_stats,
+        bench_levelization,
+        bench_modes,
+        bench_threshold,
+        bench_transient,
+    )
+
+    print("name,us_per_call,derived")
+    print("# === Table II: levelization (relaxed vs double-U detection) ===")
+    bench_levelization.main()
+    print("# === Table I: numeric factorization ===")
+    bench_factorization.main()
+    print("# === Table III: kernel-mode ablation ===")
+    bench_modes.main()
+    print("# === Fig 12: panel threshold sweep ===")
+    bench_threshold.main()
+    print("# === Fig 10: level parallelism profile ===")
+    bench_level_stats.main()
+    print("# === End-to-end transient (SPICE loop) ===")
+    bench_transient.main()
+
+
+if __name__ == "__main__":
+    main()

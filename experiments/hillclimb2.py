@@ -1,0 +1,52 @@
+"""§Perf hillclimb round 2 (after round-1 verdicts)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = Path("experiments/dryrun")
+
+
+def main():
+    jobs = [
+        # Cell A round 2 — h1 (no-EP) was REFUTED; qwen's SP win suggests the
+        # dominant all-reduce is activation traffic, not expert dispatch.
+        # H1c: sequence-parallel activations with EP kept. Predict: all-reduce
+        # bytes drop >2x like qwen's did.
+        dict(arch="deepseek-v2-lite-16b", shape_name="train_4k", multi_pod=False,
+             rules_override={"seq": "model"}, tag="h1c_sp"),
+
+        # Cell B round 2 — h2 (pure DP) was REFUTED because batch only sharded
+        # over data (16-way): per-device compute rose 8x. Fix: batch over
+        # data AND model (256-way DP). Predict: compute back to ~baseline/16,
+        # collective ~= grad reduce only.
+        dict(arch="qwen2.5-3b", shape_name="train_4k", multi_pod=False,
+             rules_override={"heads": None, "kv_heads": None, "ffn": None,
+                             "vocab": None, "batch": ("pod", "data", "model")},
+             cfg_override={"fsdp": True}, tag="h2c_dp256"),
+        # and the SP winner combined with FSDP weights (halve weight HBM):
+        dict(arch="qwen2.5-3b", shape_name="train_4k", multi_pod=False,
+             rules_override={"seq": "model"}, cfg_override={"fsdp": True},
+             tag="h2d_sp_fsdp"),
+
+        # Cell C round 2 — h3 (no remat) CONFIRMED the memory-term win but
+        # blew past HBM (21.4 GB/dev). H3c: selective remat (save matmul
+        # outputs, recompute elementwise). Predict: memory term between full
+        # remat and none; temp bytes fit 16 GB.
+        dict(arch="nemotron-4-340b", shape_name="train_4k", multi_pod=False,
+             cfg_override={"remat_policy": "dots"}, tag="h3c_dots"),
+        # H3d: selective remat + sequence parallelism (qwen's win, applied to
+        # the 340B: norms/elementwise are seq-sharded, cutting both HBM and
+        # the TP all-reduce volume).
+        dict(arch="nemotron-4-340b", shape_name="train_4k", multi_pod=False,
+             rules_override={"seq": "model"},
+             cfg_override={"remat_policy": "dots"}, tag="h3d_dots_sp"),
+    ]
+    for j in jobs:
+        run_cell(out_dir=OUT, **j)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""§Perf hillclimb round 3: local MoE dispatch groups for cell A."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = Path("experiments/dryrun")
+
+
+def main():
+    # H1d: the global argsort/scatter in MoE dispatch is what GSPMD turns
+    # into TB-scale all-reduces (h1/h1c refuted EP and SP as causes).
+    # GShard-style local dispatch groups (16, aligned with the data axis)
+    # keep sort+scatter shard-local. Predict: all-reduce bytes drop >3x.
+    run_cell("deepseek-v2-lite-16b", "train_4k", False, OUT,
+             cfg_override={"moe_groups": 16}, tag="h1d_groups16")
+    # and combined with the qwen-style SP win:
+    run_cell("deepseek-v2-lite-16b", "train_4k", False, OUT,
+             cfg_override={"moe_groups": 16},
+             rules_override={"seq": "model"}, tag="h1e_groups16_sp")
+    # mixtral + jamba get the same treatment (they share the dispatch path)
+    run_cell("mixtral-8x7b", "train_4k", False, OUT,
+             cfg_override={"moe_groups": 16}, tag="h1f_groups16")
+    run_cell("jamba-v0.1-52b", "train_4k", False, OUT,
+             cfg_override={"moe_groups": 16}, tag="h1g_groups16")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""§Perf round 4: decode-cell context parallelism (nemotron decode_32k was
+collective-bound: 1.9s coll vs 1.0s mem)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = Path("experiments/dryrun")
+
+
+def main():
+    # H4: decode_32k is collective-bound because FSDP'd weights are
+    # all-gathered for a 1-token matmul. Two candidate fixes:
+    # (a) context-parallel KV (shard cache seq over model) — spreads the
+    #     cache read but adds softmax partial reductions;
+    # (b) keep weights fully sharded but batch over data only (replicate
+    #     weight gather across steps is unavoidable in a single step fn).
+    run_cell("nemotron-4-340b", "decode_32k", False, OUT,
+             rules_override={"kv_seq": "model"}, tag="h4_cp")
+    run_cell("nemotron-4-340b", "decode_32k", False, OUT,
+             cfg_override={"fsdp": False}, tag="h4_nofsdp")
+    run_cell("nemotron-4-340b", "decode_32k", False, OUT,
+             rules_override={"kv_seq": "model"}, cfg_override={"fsdp": False},
+             tag="h4_cp_nofsdp")
+
+
+if __name__ == "__main__":
+    main()

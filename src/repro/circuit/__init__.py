@@ -1,0 +1,4 @@
+from .mna import Circuit, rc_grid_circuit
+from .simulate import TransientResult, transient
+
+__all__ = ["Circuit", "rc_grid_circuit", "TransientResult", "transient"]

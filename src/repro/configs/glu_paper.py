@@ -1,0 +1,16 @@
+"""The paper's own benchmark configuration: matrix suites + solver knobs."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GLUConfig:
+    suite: str = "grid64"          # key into repro.sparse.SUITES
+    ordering: str = "auto"
+    symbolic: str = "auto"
+    dtype: str = "float64"
+    fuse_levels: bool = True
+    use_pallas: bool = False
+    panel_threshold: int = 16      # paper: stream mode engages at level size 16
+
+
+CONFIG = GLUConfig()

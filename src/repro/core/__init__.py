@@ -1,0 +1,51 @@
+# GLU3.0 core: symbolic analysis, relaxed dependency detection, levelization,
+# level-scheduled numeric factorization and triangular solves.
+from .api import GLU
+from .dependency import (
+    Levelization,
+    dependencies_doubleu,
+    dependencies_relaxed,
+    dependencies_upattern,
+    level_stats,
+    levelize,
+    levelize_relaxed,
+)
+from .factorize import (
+    JaxFactorizer,
+    factorize_numpy,
+    factorize_numpy_fast,
+    leftlooking_numpy,
+    split_lu,
+)
+from .ordering import fill_reducing_ordering, minimum_degree, rcm, zero_free_diagonal
+from .plan import FactorizePlan, build_plan
+from .symbolic import FilledPattern, symbolic_fillin, symbolic_fillin_etree, symbolic_fillin_gp
+from .triangular import JaxTriangularSolver, trisolve_numpy
+
+__all__ = [
+    "GLU",
+    "Levelization",
+    "dependencies_doubleu",
+    "dependencies_relaxed",
+    "dependencies_upattern",
+    "level_stats",
+    "levelize",
+    "levelize_relaxed",
+    "JaxFactorizer",
+    "factorize_numpy",
+    "factorize_numpy_fast",
+    "leftlooking_numpy",
+    "split_lu",
+    "fill_reducing_ordering",
+    "minimum_degree",
+    "rcm",
+    "zero_free_diagonal",
+    "FactorizePlan",
+    "build_plan",
+    "FilledPattern",
+    "symbolic_fillin",
+    "symbolic_fillin_etree",
+    "symbolic_fillin_gp",
+    "JaxTriangularSolver",
+    "trisolve_numpy",
+]

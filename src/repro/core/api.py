@@ -1,0 +1,112 @@
+"""GLU facade: the paper's full flow (Fig. 5) behind one class.
+
+  A -> MC64-lite (zero-free diagonal) -> fill-reducing ordering ->
+  symbolic fill-in -> relaxed dependency detection + levelization ->
+  plan -> (re)factorize on device -> triangular solve
+
+Construction does all host-side symbolic work once; ``factorize``/``solve``
+are the fast repeated path (SPICE Newton iterations reuse the plan).
+
+Permutation algebra: with row_map/col_map (old -> new),
+``A_perm[row_map[i], col_map[j]] = A[i, j]`` and solving ``A x = b`` becomes
+``A_perm x_perm = b_perm`` with ``b_perm = b[inv_row_map]`` and
+``x = x_perm[col_map]``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..sparse.csc import CSC
+from .dependency import levelize_relaxed
+from .factorize import JaxFactorizer
+from .ordering import fill_reducing_ordering, zero_free_diagonal
+from .plan import build_plan
+from .symbolic import symbolic_fillin
+from .triangular import JaxTriangularSolver
+
+__all__ = ["GLU"]
+
+
+class GLU:
+    def __init__(
+        self,
+        A: CSC,
+        ordering: str = "auto",
+        symbolic: str = "auto",
+        dtype=jnp.float64,
+        mc64: bool = True,
+        fuse_levels: bool = True,
+        use_pallas: bool = False,
+        panel_threshold: int = 16,
+    ):
+        self.n = A.n
+        self._A_scipy = A.to_scipy()
+        # --- preprocessing -------------------------------------------------
+        if mc64:
+            row_perm = zero_free_diagonal(A)
+        else:
+            row_perm = np.arange(A.n, dtype=np.int64)
+        A_rp = A.permute(row_perm, np.arange(A.n, dtype=np.int64))
+        sym_perm = fill_reducing_ordering(A_rp, ordering)
+        self.row_map = sym_perm[row_perm]       # old row -> new row
+        self.col_map = sym_perm                 # old col -> new col
+        self._inv_row = np.argsort(self.row_map)
+        A_perm = A.permute(self.row_map, self.col_map)
+        self._A_perm = A_perm
+        # original-entry-order -> permuted-entry-order map (for refactorize)
+        rows0, cols0, _ = A.to_coo()
+        self._data_perm = np.lexsort((self.row_map[rows0], self.col_map[cols0]))
+
+        # --- symbolic ------------------------------------------------------
+        self.pattern = symbolic_fillin(A_perm, symbolic)
+        self.levelization = levelize_relaxed(self.pattern)
+        self.plan = build_plan(self.pattern, self.levelization,
+                               panel_threshold=panel_threshold)
+        self._factorizer = JaxFactorizer(
+            self.plan, dtype=dtype, fuse_levels=fuse_levels, use_pallas=use_pallas
+        )
+        self._solver = JaxTriangularSolver(self.plan)
+        self._vals: Optional[jnp.ndarray] = None
+        self.dtype = dtype
+
+    # -- numeric phase (repeatable) -----------------------------------------
+    def factorize(self, a_data=None) -> "GLU":
+        """(Re)factorize; ``a_data`` are new values in A's original CSC entry
+        order (same pattern — the SPICE refactorization contract)."""
+        if a_data is None:
+            data = np.asarray(self._A_perm.data)
+        else:
+            data = np.asarray(a_data)[self._data_perm]
+        self._vals = self._factorizer.factorize(data)
+        return self
+
+    def factorized_values(self) -> jnp.ndarray:
+        if self._vals is None:
+            raise RuntimeError("call factorize() first")
+        return self._vals
+
+    def solve(self, b) -> np.ndarray:
+        """Solve A x = b using the current factorization."""
+        if self._vals is None:
+            self.factorize()
+        bp = np.asarray(b, dtype=np.float64)[self._inv_row]
+        xp = np.asarray(self._solver.solve(self._vals, bp))
+        return xp[self.col_map]
+
+    # -- diagnostics ----------------------------------------------------------
+    @property
+    def nnz_filled(self) -> int:
+        return self.pattern.nnz
+
+    @property
+    def num_levels(self) -> int:
+        return self.levelization.num_levels
+
+    def residual(self, b, x) -> float:
+        """||Ax - b||_inf / ||b||_inf on the original system."""
+        r = self._A_scipy @ np.asarray(x, dtype=np.float64) - np.asarray(b)
+        return float(np.abs(r).max() / (np.abs(b).max() + 1e-300))

@@ -1,0 +1,168 @@
+"""Column dependency detection + levelization (the paper's first contribution).
+
+Three detectors over the filled pattern ``As``:
+
+* ``dependencies_upattern`` — GLU1.0 rule: column k depends on i < k iff
+  ``As(i,k) != 0`` and column i of L is non-empty.  Misses double-U hazards.
+* ``dependencies_doubleu`` — GLU2.0's exact double-U detection (paper
+  Alg. 3): the expensive triple-nested scan.  Returned edges are *only* the
+  double-U edges; GLU2.0's full dependency set is upattern ∪ doubleu.
+* ``dependencies_relaxed`` — GLU3.0 (paper Alg. 4): U-pattern rule plus the
+  "look left" L-row rule — a sufficient superset found in two flat loops.
+
+``levelize`` turns any edge set into levels (longest-path from sources);
+``levelize_relaxed`` fuses detection+levelization the way the production
+code path does (no edge materialisation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..sparse.csc import csc_transpose_pattern
+from .symbolic import FilledPattern
+
+__all__ = [
+    "Levelization",
+    "dependencies_upattern",
+    "dependencies_relaxed",
+    "dependencies_doubleu",
+    "levelize",
+    "levelize_relaxed",
+    "level_stats",
+]
+
+
+@dataclasses.dataclass
+class Levelization:
+    levels: np.ndarray        # (n,) int32 level of each column
+    order: np.ndarray         # (n,) columns grouped by level
+    level_ptr: np.ndarray     # (nlevels+1,) offsets into ``order``
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_ptr) - 1
+
+    def columns_at(self, lv: int) -> np.ndarray:
+        return self.order[self.level_ptr[lv] : self.level_ptr[lv + 1]]
+
+
+def _l_nonempty(As: FilledPattern) -> np.ndarray:
+    """Boolean per column: does column j have any L entry (row > j)?"""
+    n = As.n
+    out = np.zeros(n, dtype=bool)
+    last = As.indices[np.maximum(As.indptr[1:] - 1, As.indptr[:-1])]
+    out = last > np.arange(n)
+    # columns with zero entries (cannot happen post-fill, diag always present)
+    empty = As.indptr[1:] == As.indptr[:-1]
+    out[empty] = False
+    return out
+
+
+def dependencies_upattern(As: FilledPattern) -> tuple[np.ndarray, np.ndarray]:
+    """GLU1.0 edges as (src, dst): dst depends on src."""
+    n = As.n
+    cols = np.repeat(np.arange(n, dtype=np.int32), np.diff(As.indptr))
+    rows = As.indices
+    lne = _l_nonempty(As)
+    m = (rows < cols) & lne[rows]
+    return rows[m].astype(np.int64), cols[m].astype(np.int64)
+
+
+def dependencies_relaxed(As: FilledPattern) -> tuple[np.ndarray, np.ndarray]:
+    """GLU3.0 (Alg. 4) edges as (src, dst) — vectorised two-rule scan."""
+    n = As.n
+    cols = np.repeat(np.arange(n, dtype=np.int32), np.diff(As.indptr))
+    rows = As.indices
+    lne = _l_nonempty(As)
+    up = (rows < cols) & lne[rows]          # look up: U pattern
+    left = rows > cols                      # look left: L row pattern
+    src = np.concatenate([rows[up], cols[left]]).astype(np.int64)
+    dst = np.concatenate([cols[up], rows[left]]).astype(np.int64)
+    return src, dst
+
+
+def dependencies_doubleu(As: FilledPattern) -> tuple[np.ndarray, np.ndarray]:
+    """GLU2.0 (Alg. 3) exact double-U detection.  Deliberately faithful to the
+    paper's triple-nested structure (this is the slow baseline being
+    replaced); row patterns come from a CSR view, membership tests use
+    sorted-array intersection."""
+    n = As.n
+    indptr_t, indices_t, _ = csc_transpose_pattern(n, As.indptr, As.indices)
+
+    def row_pattern(i):
+        return indices_t[indptr_t[i] : indptr_t[i + 1]]
+
+    src, dst = [], []
+    for i in range(n):
+        Ii = row_pattern(i)
+        s, e = int(As.indptr[i]), int(As.indptr[i + 1])
+        col_i = As.indices[s:e]
+        for t in col_i[col_i > i]:          # A_s(t, i) != 0, t > i
+            ts, te = int(As.indptr[t]), int(As.indptr[t + 1])
+            col_t = As.indices[ts:te]
+            hit = False
+            for j in col_t[col_t >= t]:     # A_s(j, t) != 0
+                Ij = row_pattern(j)
+                # exists k in Ii ∩ Ij with k > t ?
+                ka = Ii[np.searchsorted(Ii, t + 1):]
+                kb = Ij[np.searchsorted(Ij, t + 1):]
+                if len(np.intersect1d(ka, kb, assume_unique=True)):
+                    hit = True
+                    break
+            if hit:
+                src.append(int(i))
+                dst.append(int(t))
+    return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64)
+
+
+def _levels_to_levelization(levels: np.ndarray) -> Levelization:
+    nlev = int(levels.max()) + 1 if len(levels) else 0
+    order = np.argsort(levels, kind="stable").astype(np.int32)
+    counts = np.bincount(levels, minlength=nlev)
+    level_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return Levelization(levels.astype(np.int32), order, level_ptr)
+
+
+def levelize(n: int, src: np.ndarray, dst: np.ndarray) -> Levelization:
+    """Longest-path levels from an explicit edge list (all edges src < dst)."""
+    order = np.argsort(dst, kind="stable")
+    src = src[order]
+    dst = dst[order]
+    ptr = np.searchsorted(dst, np.arange(n + 1))
+    levels = np.zeros(n, dtype=np.int64)
+    for k in range(n):
+        s, e = ptr[k], ptr[k + 1]
+        if e > s:
+            levels[k] = levels[src[s:e]].max() + 1
+    return _levels_to_levelization(levels)
+
+
+def levelize_relaxed(As: FilledPattern) -> Levelization:
+    """Fused Alg. 4 + levelization (production path)."""
+    src, dst = dependencies_relaxed(As)
+    return levelize(As.n, src, dst)
+
+
+def level_stats(As: FilledPattern, lv: Levelization):
+    """Per-level (n_columns, max_subcolumns, total_updates) — the Fig. 10 data.
+
+    subcolumns of column j = nonzeros of row j right of the diagonal;
+    updates of column j = nnz_L(j) * n_subcolumns(j).
+    """
+    n = As.n
+    indptr_t, indices_t, _ = csc_transpose_pattern(n, As.indptr, As.indices)
+    cols = np.repeat(np.arange(n, dtype=np.int32), np.diff(As.indptr))
+    nnz_l = np.bincount(cols[As.indices > cols], minlength=n)
+    rows_r = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr_t))
+    nsub = np.bincount(rows_r[indices_t > rows_r], minlength=n)
+    upd = nnz_l.astype(np.int64) * nsub.astype(np.int64)
+    nlev = lv.num_levels
+    out = np.zeros((nlev, 3), dtype=np.int64)
+    for l in range(nlev):
+        cs = lv.columns_at(l)
+        out[l, 0] = len(cs)
+        out[l, 1] = nsub[cs].max() if len(cs) else 0
+        out[l, 2] = upd[cs].sum()
+    return out

@@ -1,0 +1,125 @@
+"""Preprocessing: zero-free diagonal permutation (MC64-lite) and fill-reducing
+ordering (minimum-degree / RCM).
+
+The GLU flow (paper Fig. 5) runs MC64 + AMD before symbolic analysis.  Here:
+
+* ``zero_free_diagonal`` — maximum-cardinality bipartite matching (the
+  structural half of MC64; the max-product scaling variant is out of scope,
+  see DESIGN.md assumption log).
+* ``minimum_degree`` — classic minimum-degree on the symmetrised pattern
+  (pure python; fine to ~20k columns on this host).
+* ``rcm`` — reverse Cuthill-McKee via scipy (fast C path for large n).
+* ``fill_reducing_ordering`` — dispatcher used by the GLU facade.
+
+All orderings return ``perm`` with the convention new = perm[old]
+(i.e. ``A.permute(perm, perm)`` applies it).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from ..sparse.csc import CSC
+
+__all__ = [
+    "zero_free_diagonal",
+    "minimum_degree",
+    "rcm",
+    "fill_reducing_ordering",
+]
+
+
+def zero_free_diagonal(A: CSC) -> np.ndarray:
+    """Row permutation (old row -> new row) giving a structurally zero-free diagonal.
+
+    Uses scipy's Hopcroft-Karp maximum bipartite matching on the pattern.
+    Raises if the matrix is structurally singular.
+    """
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import maximum_bipartite_matching
+
+    S = sp.csc_matrix(
+        (np.ones(A.nnz, dtype=np.int8), A.indices, A.indptr), shape=(A.n, A.n)
+    )
+    # match[col] = row assigned to column col
+    match = maximum_bipartite_matching(S.tocsr(), perm_type="row")
+    if (match < 0).any():
+        raise ValueError("matrix is structurally singular (no perfect matching)")
+    # we need row old->new such that new_row(match[j]) == j
+    perm = np.empty(A.n, dtype=np.int64)
+    perm[match] = np.arange(A.n)
+    return perm
+
+
+def _sym_adjacency(A: CSC):
+    """Symmetrised adjacency lists (no self loops) as a list of sets."""
+    adj = [set() for _ in range(A.n)]
+    cols = np.repeat(np.arange(A.n), np.diff(A.indptr))
+    for r, c in zip(A.indices, cols):
+        if r != c:
+            adj[r].add(int(c))
+            adj[c].add(int(r))
+    return adj
+
+
+def minimum_degree(A: CSC) -> np.ndarray:
+    """Minimum-degree ordering on the symmetrised pattern (old -> new)."""
+    n = A.n
+    adj = _sym_adjacency(A)
+    heap = [(len(adj[v]), v) for v in range(n)]
+    heapq.heapify(heap)
+    eliminated = np.zeros(n, dtype=bool)
+    order = []
+    stamp = np.full(n, -1, dtype=np.int64)
+    while heap:
+        d, v = heapq.heappop(heap)
+        if eliminated[v] or d != len(adj[v]):
+            continue  # stale entry
+        eliminated[v] = True
+        order.append(v)
+        nbrs = [u for u in adj[v] if not eliminated[u]]
+        # clique the neighbourhood (elimination graph update)
+        for u in nbrs:
+            adj[u].discard(v)
+        for i, u in enumerate(nbrs):
+            au = adj[u]
+            for w in nbrs[i + 1 :]:
+                if w not in au:
+                    au.add(w)
+                    adj[w].add(u)
+        for u in nbrs:
+            if stamp[u] != len(adj[u]):
+                stamp[u] = len(adj[u])
+                heapq.heappush(heap, (len(adj[u]), u))
+        adj[v] = set()
+    perm = np.empty(n, dtype=np.int64)
+    perm[np.array(order)] = np.arange(n)
+    return perm
+
+
+def rcm(A: CSC) -> np.ndarray:
+    """Reverse Cuthill-McKee on the symmetrised pattern (old -> new)."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import reverse_cuthill_mckee
+
+    S = sp.csc_matrix(
+        (np.ones(A.nnz, dtype=np.int8), A.indices, A.indptr), shape=(A.n, A.n)
+    )
+    S = (S + S.T).tocsr()
+    order = reverse_cuthill_mckee(S, symmetric_mode=True)
+    perm = np.empty(A.n, dtype=np.int64)
+    perm[order] = np.arange(A.n)
+    return perm
+
+
+def fill_reducing_ordering(A: CSC, method: str = "auto") -> np.ndarray:
+    if method == "none":
+        return np.arange(A.n, dtype=np.int64)
+    if method == "auto":
+        method = "mindeg" if A.n <= 6000 else "rcm"
+    if method == "mindeg":
+        return minimum_degree(A)
+    if method == "rcm":
+        return rcm(A)
+    raise ValueError(f"unknown ordering method {method!r}")

@@ -1,0 +1,264 @@
+"""FactorizePlan: host-side compilation of the symbolic analysis into flat
+per-level index arrays the numeric executors consume.
+
+The plan is built once per sparsity pattern and reused across
+refactorizations (the SPICE/Newton-Raphson use case the paper targets).
+
+Per level ℓ the numeric step is:
+
+  1. normalisation   vals[norm_idx] /= vals[norm_diag]        (L of level cols)
+  2. submatrix update vals[didx]   -= vals[lidx] * vals[uidx] (all updates whose
+                                                               *source* column
+                                                               is in level ℓ)
+
+Update triples are stored sorted by (level, destination column) so that the
+segmented Pallas kernel can process contiguous per-destination runs, and the
+flat XLA executor can slice a level in O(1).
+
+Padding convention: all padded index slots hold ``nnz`` (one past the value
+array); executors gather with ``mode='fill'`` and scatter with
+``mode='drop'`` so padding is inert — no scratch slot, no NaNs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..sparse.csc import csc_transpose_pattern
+from .dependency import Levelization, levelize_relaxed
+from .symbolic import FilledPattern
+
+__all__ = ["FactorizePlan", "LevelSegment", "build_plan", "MODE_FLAT", "MODE_SEGMENTED", "MODE_PANEL"]
+
+MODE_FLAT = "flat"            # one fused scatter-add (type A levels)
+MODE_SEGMENTED = "segmented"  # Pallas per-destination-column kernel (type B)
+MODE_PANEL = "panel"          # few long columns: per-column dense panel (type C)
+
+
+def _concat_ranges(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Vectorised concatenation of [starts[i], ends[i]) ranges."""
+    counts = (ends - starts).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    out = np.ones(total, dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    nz = counts > 0
+    first = offsets[nz]
+    starts_nz = starts[nz].astype(np.int64)
+    counts_nz = counts[nz]
+    out[first] = starts_nz
+    out[first[1:]] -= (starts_nz + counts_nz)[:-1] - 1
+    return np.cumsum(out)
+
+
+@dataclasses.dataclass
+class LevelSegment:
+    """One level's numeric work (unpadded views into the plan arrays)."""
+
+    level: int
+    cols: np.ndarray        # columns factorised at this level
+    norm_slice: slice       # into norm_idx / norm_diag
+    upd_slice: slice        # into lidx / uidx / didx (and dst_col)
+    mode: str
+
+    @property
+    def n_norm(self) -> int:
+        return self.norm_slice.stop - self.norm_slice.start
+
+    @property
+    def n_upd(self) -> int:
+        return self.upd_slice.stop - self.upd_slice.start
+
+
+@dataclasses.dataclass
+class FactorizePlan:
+    n: int
+    nnz: int
+    indptr: np.ndarray
+    indices: np.ndarray
+    diag_idx: np.ndarray          # (n,) flat value index of each diagonal
+    levels: Levelization
+    # normalisation arrays, concatenated in level order
+    norm_idx: np.ndarray
+    norm_diag: np.ndarray
+    # update triples, sorted by (level, destination column)
+    lidx: np.ndarray
+    uidx: np.ndarray
+    didx: np.ndarray
+    dst_col: np.ndarray
+    segments: list[LevelSegment]
+    a_scatter: np.ndarray         # original A entry -> filled value index
+    # trisolve plans
+    fwd_rows: np.ndarray          # L entry row i
+    fwd_cols: np.ndarray          # L entry col j
+    fwd_vidx: np.ndarray          # L entry value index
+    fwd_ptr: np.ndarray           # per-L-level offsets into fwd_* (by level of j)
+    bwd_rows: np.ndarray
+    bwd_cols: np.ndarray
+    bwd_vidx: np.ndarray
+    bwd_ptr: np.ndarray
+    bwd_level_cols: np.ndarray    # columns ordered by U-level
+    bwd_col_ptr: np.ndarray
+
+    @property
+    def num_levels(self) -> int:
+        return self.levels.num_levels
+
+    @property
+    def total_updates(self) -> int:
+        return len(self.lidx)
+
+    def flops(self) -> int:
+        """2 flops per MAC update + 1 per normalisation division."""
+        return 2 * len(self.lidx) + len(self.norm_idx)
+
+
+def _mode_for_level(n_cols: int, n_upd: int, panel_threshold: int) -> str:
+    if n_cols > 4 * panel_threshold:
+        return MODE_FLAT
+    if n_cols <= panel_threshold:
+        return MODE_PANEL
+    return MODE_SEGMENTED
+
+
+def build_plan(
+    As: FilledPattern,
+    lv: Optional[Levelization] = None,
+    panel_threshold: int = 16,
+) -> FactorizePlan:
+    n, indptr, indices = As.n, As.indptr.astype(np.int64), As.indices
+    if lv is None:
+        lv = levelize_relaxed(As)
+    levels = lv.levels.astype(np.int64)
+
+    # diagonal positions (rows sorted per column -> searchsorted)
+    diag_pos = np.empty(n, dtype=np.int64)
+    for j in range(n):
+        s, e = indptr[j], indptr[j + 1]
+        p = s + np.searchsorted(indices[s:e], j)
+        if p >= e or indices[p] != j:
+            raise ValueError(f"zero diagonal at column {j} (run MC64 first)")
+        diag_pos[j] = p
+    l_start = diag_pos + 1
+    l_end = indptr[1:]
+    nnz_l = (l_end - l_start).astype(np.int64)
+
+    # --- normalisation arrays grouped by level -----------------------------
+    order = lv.order.astype(np.int64)
+    norm_idx = _concat_ranges(l_start[order], l_end[order])
+    norm_diag = np.repeat(diag_idx_of := diag_pos[order], nnz_l[order])
+    norm_counts = np.zeros(lv.num_levels, dtype=np.int64)
+    np.add.at(norm_counts, levels[order.astype(np.int64)], nnz_l[order])
+    norm_ptr = np.concatenate([[0], np.cumsum(norm_counts)])
+
+    # --- update triples, destination-column major --------------------------
+    lidx_parts, uidx_parts, didx_parts, lev_parts, dst_parts = [], [], [], [], []
+    for k in range(n):
+        s, e = indptr[k], indptr[k + 1]
+        dpos = diag_pos[k]
+        jj = indices[s:dpos].astype(np.int64)       # U entries: rows j < k
+        if len(jj) == 0:
+            continue
+        cnt = nnz_l[jj]
+        if cnt.sum() == 0:
+            continue
+        u_flat = np.arange(s, dpos, dtype=np.int64)
+        l_flat = _concat_ranges(l_start[jj], l_end[jj])
+        l_rows = indices[l_flat]
+        d_flat = s + np.searchsorted(indices[s:e], l_rows)
+        lidx_parts.append(l_flat)
+        uidx_parts.append(np.repeat(u_flat, cnt))
+        didx_parts.append(d_flat)
+        lev_parts.append(np.repeat(levels[jj], cnt))
+        dst_parts.append(np.full(int(cnt.sum()), k, dtype=np.int64))
+
+    if lidx_parts:
+        lidx = np.concatenate(lidx_parts)
+        uidx = np.concatenate(uidx_parts)
+        didx = np.concatenate(didx_parts)
+        lev = np.concatenate(lev_parts)
+        dst = np.concatenate(dst_parts)
+        srt = np.argsort(lev, kind="stable")  # within level: dst ascending
+        lidx, uidx, didx, lev, dst = lidx[srt], uidx[srt], didx[srt], lev[srt], dst[srt]
+    else:
+        lidx = uidx = didx = lev = dst = np.empty(0, dtype=np.int64)
+    upd_ptr = np.searchsorted(lev, np.arange(lv.num_levels + 1))
+
+    segments = []
+    for l in range(lv.num_levels):
+        cols = lv.columns_at(l)
+        nu = int(upd_ptr[l + 1] - upd_ptr[l])
+        segments.append(
+            LevelSegment(
+                level=l,
+                cols=cols,
+                norm_slice=slice(int(norm_ptr[l]), int(norm_ptr[l + 1])),
+                upd_slice=slice(int(upd_ptr[l]), int(upd_ptr[l + 1])),
+                mode=_mode_for_level(len(cols), nu, panel_threshold),
+            )
+        )
+
+    # --- forward trisolve plan (L levels == factorisation levels) ----------
+    all_cols_l = np.repeat(np.arange(n, dtype=np.int64), nnz_l)
+    fwd_vidx = _concat_ranges(l_start, l_end)
+    fwd_rows = indices[fwd_vidx].astype(np.int64)
+    fwd_cols = all_cols_l
+    fwd_lev = levels[fwd_cols]
+    srt = np.argsort(fwd_lev, kind="stable")
+    fwd_rows, fwd_cols, fwd_vidx, fwd_lev = (
+        fwd_rows[srt], fwd_cols[srt], fwd_vidx[srt], fwd_lev[srt])
+    fwd_ptr = np.searchsorted(fwd_lev, np.arange(lv.num_levels + 1))
+
+    # --- backward trisolve plan (U levels, computed descending) ------------
+    indptr_t, indices_t, pos_t = csc_transpose_pattern(n, As.indptr, As.indices)
+    ulev = np.zeros(n, dtype=np.int64)
+    for j in range(n - 1, -1, -1):
+        s, e = indptr_t[j], indptr_t[j + 1]
+        ks = indices_t[s:e]
+        ks = ks[ks > j]
+        if len(ks):
+            ulev[j] = ulev[ks].max() + 1
+    nulev = int(ulev.max()) + 1 if n else 0
+    u_start = indptr[:-1]
+    u_end = diag_pos  # strictly-above-diagonal entries
+    nnz_u = (u_end - u_start).astype(np.int64)
+    bwd_vidx = _concat_ranges(u_start, u_end)
+    bwd_rows = indices[bwd_vidx].astype(np.int64)
+    bwd_cols = np.repeat(np.arange(n, dtype=np.int64), nnz_u)
+    bwd_lev = ulev[bwd_cols]
+    srt = np.argsort(bwd_lev, kind="stable")
+    bwd_rows, bwd_cols, bwd_vidx, bwd_lev = (
+        bwd_rows[srt], bwd_cols[srt], bwd_vidx[srt], bwd_lev[srt])
+    bwd_ptr = np.searchsorted(bwd_lev, np.arange(nulev + 1))
+    col_order = np.argsort(ulev, kind="stable").astype(np.int64)
+    bwd_col_ptr = np.searchsorted(ulev[col_order], np.arange(nulev + 1))
+
+    return FactorizePlan(
+        n=n,
+        nnz=As.nnz,
+        indptr=As.indptr,
+        indices=indices,
+        diag_idx=diag_pos,
+        levels=lv,
+        norm_idx=norm_idx,
+        norm_diag=norm_diag,
+        lidx=lidx,
+        uidx=uidx,
+        didx=didx,
+        dst_col=dst,
+        segments=segments,
+        a_scatter=As.a_scatter,
+        fwd_rows=fwd_rows,
+        fwd_cols=fwd_cols,
+        fwd_vidx=fwd_vidx,
+        fwd_ptr=fwd_ptr,
+        bwd_rows=bwd_rows,
+        bwd_cols=bwd_cols,
+        bwd_vidx=bwd_vidx,
+        bwd_ptr=bwd_ptr,
+        bwd_level_cols=col_order,
+        bwd_col_ptr=bwd_col_ptr,
+    )

@@ -1,0 +1,19 @@
+from .sharding import (
+    DEFAULT_RULES,
+    axis_env,
+    logical_constraint,
+    make_rules,
+    sharding_for_spec,
+    spec_struct,
+    tree_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "axis_env",
+    "logical_constraint",
+    "make_rules",
+    "sharding_for_spec",
+    "spec_struct",
+    "tree_shardings",
+]

@@ -1,0 +1,164 @@
+"""Logical-axis sharding: one rules table maps logical names to mesh axes.
+
+Models annotate activations with ``logical_constraint(x, *names)`` and
+declare parameter axes in their spec trees; the launcher activates a
+``(mesh, rules)`` environment and everything resolves through it.  Outside
+an environment every annotation is a no-op, so the same model code runs on
+one CPU device (smoke tests) and on the 512-chip production mesh.
+
+Robustness rule: a logical axis only shards if the dimension is divisible
+by the product of mesh-axis sizes — otherwise it silently replicates (e.g.
+8 Mixtral experts on a 16-way model axis, whisper's 8 heads).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "axis_env",
+    "current_env",
+    "logical_constraint",
+    "sharding_for_spec",
+    "tree_shardings",
+    "make_rules",
+]
+
+# logical name -> mesh axis (or tuple of axes, or None = replicate)
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # "model" enables sequence/context parallelism
+    "kv_seq": None,         # "model" enables context-parallel decode
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert_ffn": "model",
+    "experts": "model",
+    "vocab": "model",
+    "model": "model",       # identity for directly-annotated params
+    "fsdp": "data",
+}
+
+_ENV: contextvars.ContextVar = contextvars.ContextVar("repro_axis_env", default=None)
+
+
+def make_rules(cfg=None, **overrides) -> dict:
+    """Per-arch rules: start from defaults, apply config knobs + overrides."""
+    rules = dict(DEFAULT_RULES)
+    if cfg is not None:
+        if not cfg.attn_tp:
+            rules["heads"] = None
+            rules["kv_heads"] = None
+        if getattr(cfg, "seq_shard", False):
+            rules["seq"] = "model"   # sequence parallelism (§Perf h2b/h3d)
+    rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def axis_env(mesh: Mesh, rules: Optional[dict] = None):
+    token = _ENV.set((mesh, rules or dict(DEFAULT_RULES)))
+    try:
+        yield
+    finally:
+        _ENV.reset(token)
+
+
+def current_env():
+    return _ENV.get()
+
+
+def _resolve(name, dim: int, mesh: Mesh, rules: dict, used: set | None = None):
+    """Logical name -> tuple of mesh axes (or None).
+
+    Guards: (a) the dim must divide the mesh-axis product, (b) a mesh axis
+    may appear only once per spec — first dim wins, later dims replicate
+    (e.g. MoE weights where both 'experts' and 'expert_ffn' map to 'model')."""
+    if name is None:
+        return None
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    axes = tuple(a for a in axes if a in mesh.axis_names
+                 and (used is None or a not in used))
+    if not axes:
+        return None
+    size = math.prod(mesh.shape[a] for a in axes)
+    if size == 0 or dim % size != 0:
+        return None
+    if used is not None:
+        used.update(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _resolve_spec(names, shape, mesh: Mesh, rules: dict):
+    used: set = set()
+    return [_resolve(nm, shape[i], mesh, rules, used) for i, nm in enumerate(names)]
+
+
+def logical_constraint(x, *names):
+    env = _ENV.get()
+    if env is None:
+        return x
+    mesh, rules = env
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = _resolve_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def sharding_for_spec(shape, axes, mesh: Mesh, rules: dict,
+                      fsdp: bool = False) -> NamedSharding:
+    """Parameter sharding from a spec leaf; with ``fsdp`` the first
+    replicated dim that divides the data axis additionally shards over it
+    (ZeRO-3-style weight sharding)."""
+    spec = _resolve_spec(axes, shape, mesh, rules)
+    used = set()
+    for s in spec:
+        if s:
+            used.update(s if isinstance(s, tuple) else (s,))
+    if fsdp and "data" in mesh.axis_names and "data" not in used:
+        dsize = mesh.shape["data"]
+        for i, s in enumerate(spec):
+            if s is None and shape[i] % dsize == 0 and shape[i] >= 512:
+                spec[i] = "data"
+                break
+    return NamedSharding(mesh, P(*spec))
+
+
+def tree_shardings(specs, mesh: Mesh, rules: dict, fsdp: bool = False):
+    """Map a spec tree — leaves (shape, dtype, axes) — to NamedShardings."""
+
+    def leaf(s):
+        shape, _dtype, axes = s
+        return sharding_for_spec(shape, axes, mesh, rules, fsdp)
+
+    return jax.tree.map(leaf, specs, is_leaf=_is_spec_leaf)
+
+
+def _is_spec_leaf(x):
+    return (
+        isinstance(x, tuple)
+        and len(x) == 3
+        and isinstance(x[0], tuple)
+        and isinstance(x[1], str)
+    )
+
+
+def spec_struct(specs):
+    """Spec tree -> ShapeDtypeStruct tree (dry-run lowering input)."""
+
+    def leaf(s):
+        shape, dtype, _axes = s
+        return jax.ShapeDtypeStruct(shape, np.dtype(dtype) if dtype != "bfloat16"
+                                    else jax.numpy.bfloat16)
+
+    return jax.tree.map(leaf, specs, is_leaf=_is_spec_leaf)

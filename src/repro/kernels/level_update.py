@@ -1,0 +1,71 @@
+"""Pallas TPU kernel for the GLU submatrix (subcolumn) update.
+
+This is the paper's central compute: for every update triple in a level,
+``A(i,k) -= A(i,j) * A(j,k)``.  On the GPU this is an atomic MAC scatter; on
+TPU we make it collision-free by segmenting updates per *destination column*
+(the plan already stores them destination-major) and accumulating inside
+VMEM with a one-hot matmul — the MXU performs the scatter-add.
+
+Geometry (chosen at plan time per level — the TPU analogue of the paper's
+three adaptive modes):
+  D  — destination columns processed by the grid's first axis
+  R  — padded updates per destination column (multiple of RC=256)
+  C  — padded destination column length, split into CB=512 blocks
+Type B levels compile with large D / small R,C; type C levels with small D /
+large R,C (panel).  Type A levels bypass this kernel entirely (flat XLA
+scatter-add is optimal there).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segmented_accumulate", "RC", "CB"]
+
+RC = 256   # contribution chunk (MXU contraction dim)
+CB = 512   # destination column block (MXU output dim)
+
+
+def _kernel(cv_ref, cb_ref, dl_ref, out_ref, *, R: int, cb_size: int):
+    """One (destination column, column block) cell."""
+    blk = pl.program_id(1)
+    base = blk * cb_size
+    dtype = cv_ref.dtype
+    acc = jnp.zeros((1, cb_size), dtype=dtype)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (RC, cb_size), 1) + base
+    for rc in range(R // RC):
+        dl = dl_ref[0, rc * RC : (rc + 1) * RC]            # (RC,) int32
+        onehot = (dl[:, None] == col_ids).astype(dtype)     # (RC, CB)
+        contrib = cb_ref[0, rc * RC : (rc + 1) * RC][None, :]
+        acc = acc + jnp.dot(contrib, onehot, preferred_element_type=dtype)
+    out_ref[...] = cv_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segmented_accumulate(col_vals, contribs, didx_local, *, interpret: bool = True):
+    """col_vals (D,C) += scatter(contribs (D,R) at didx_local (D,R)).
+
+    Padding: contribs 0-padded; didx_local padded with >= C (never matches).
+    C must be a multiple of CB or < CB (then one block); R a multiple of RC.
+    """
+    D, C = col_vals.shape
+    _, R = contribs.shape
+    cb_size = min(C, CB)
+    assert C % cb_size == 0 and R % RC == 0, (C, R)
+    n_cb = C // cb_size
+    kernel = functools.partial(_kernel, R=R, cb_size=cb_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(D, n_cb),
+        in_specs=[
+            pl.BlockSpec((1, cb_size), lambda d, b: (d, b)),
+            pl.BlockSpec((1, R), lambda d, b: (d, 0)),
+            pl.BlockSpec((1, R), lambda d, b: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb_size), lambda d, b: (d, b)),
+        out_shape=jax.ShapeDtypeStruct((D, C), col_vals.dtype),
+        interpret=interpret,
+    )(col_vals, contribs, didx_local)

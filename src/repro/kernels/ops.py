@@ -1,0 +1,60 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+``level_update`` consumes the host-precomputed (D, R, C) segmented layout
+(built once per plan in ``JaxFactorizer``): normalisation happens as a flat
+XLA op (cheap), contributions are gathered on the (D, R) grid, the Pallas
+kernel performs the per-destination-column accumulation, and the updated
+segments scatter back (segments are disjoint, so the scatter is race-free).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dense_lu import dense_lu
+from .level_update import segmented_accumulate
+
+__all__ = ["level_update", "dense_lu", "spmv"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def level_update(
+    vals,
+    norm_idx,
+    norm_diag,
+    lidx2d,
+    uidx2d,
+    didx_local,
+    col_positions,
+    *,
+    interpret: bool = True,
+):
+    """One GLU level via the segmented Pallas kernel.
+
+    vals:          (nnz,) filled value array
+    norm_idx/diag: (Pn,)  flat normalisation indices (padded with nnz)
+    lidx2d/uidx2d: (D,R)  value indices of each update's L and U operand
+    didx_local:    (D,R)  position of each update inside its destination
+                          column segment (padded with >= C)
+    col_positions: (D,C)  flat value indices of the destination segments
+                          (padded with nnz)
+    """
+    lv = vals.at[norm_idx].get(mode="fill", fill_value=0.0)
+    dv = vals.at[norm_diag].get(mode="fill", fill_value=1.0)
+    vals = vals.at[norm_idx].set(lv / dv, mode="drop")
+
+    l = vals.at[lidx2d].get(mode="fill", fill_value=0.0)
+    u = vals.at[uidx2d].get(mode="fill", fill_value=0.0)
+    contribs = -(l * u)
+    col_vals = vals.at[col_positions].get(mode="fill", fill_value=0.0)
+    out = segmented_accumulate(col_vals, contribs, didx_local, interpret=interpret)
+    return vals.at[col_positions].set(out, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows",))
+def spmv(row_ids, colidx, a_vals, x, *, n_rows: int):
+    """CSR-ish SpMV: y[row_ids] += a_vals * x[colidx] (segment-sum form)."""
+    prods = a_vals * x[colidx]
+    return jax.ops.segment_sum(prods, row_ids, num_segments=n_rows)

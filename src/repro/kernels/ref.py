@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["level_update_ref", "segmented_accumulate_ref", "dense_lu_ref", "spmv_ref"]
+
+
+def level_update_ref(vals, norm_idx, norm_diag, lidx, uidx, didx):
+    """One GLU level: normalise L parts, then apply all MAC updates.
+
+    Padded index slots hold ``len(vals)`` (drop/fill semantics).
+    """
+    lv = vals.at[norm_idx].get(mode="fill", fill_value=0.0)
+    dv = vals.at[norm_diag].get(mode="fill", fill_value=1.0)
+    vals = vals.at[norm_idx].set(lv / dv, mode="drop")
+    l = vals.at[lidx].get(mode="fill", fill_value=0.0)
+    u = vals.at[uidx].get(mode="fill", fill_value=0.0)
+    return vals.at[didx].add(-l * u, mode="drop")
+
+
+def segmented_accumulate_ref(col_vals, contribs, didx_local):
+    """Per-destination-column accumulation (the Pallas kernel's inner op).
+
+    col_vals:   (D, C)  current destination-column segments
+    contribs:   (D, R)  update contributions (already -l*u), padded with 0
+    didx_local: (D, R)  position of each contribution within its column,
+                        padded with C (out of range -> dropped)
+    returns     (D, C)  updated segments
+    """
+    D, C = col_vals.shape
+
+    def per_col(cv, cb, dl):
+        return cv.at[dl].add(cb, mode="drop")
+
+    return jax.vmap(per_col)(col_vals, contribs, didx_local)
+
+
+def dense_lu_ref(a):
+    """Unpivoted dense LU, in-place layout (L strictly below diag, unit
+    diagonal implied; U on and above). Pure lax.fori_loop reference."""
+    n = a.shape[0]
+
+    def step(j, m):
+        piv = m[j, j]
+        col = m[:, j]
+        i = jnp.arange(n)
+        lcol = jnp.where(i > j, col / piv, col)
+        m = m.at[:, j].set(lcol)
+        row = jnp.where(i > j, m[j, :], 0.0)
+        lmask = jnp.where(i > j, lcol, 0.0)
+        return m - jnp.outer(lmask, row)
+
+    return jax.lax.fori_loop(0, n, step, a)
+
+
+def spmv_ref(indptr_rows, colidx, vals, x, n_rows):
+    """CSR SpMV oracle: y = A @ x via segment-sum."""
+    row_id = jnp.searchsorted(indptr_rows, jnp.arange(len(colidx)), side="right") - 1
+    prods = vals * x[colidx]
+    return jax.ops.segment_sum(prods, row_id, num_segments=n_rows)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis and the roofline terms.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, OOM-at-compile or unsupported collective
+fails the cell.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+      --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_archs, shape_cells
+from ..distributed.sharding import axis_env, make_rules, spec_struct, tree_shardings
+from ..models.model import cache_specs, forward_decode, forward_prefill, param_specs
+from ..roofline.analysis import analyze, model_flops_for
+from ..train.optimizer import OptConfig, init_opt_state
+from ..train.train_step import TrainConfig, make_train_step
+from .mesh import make_production_mesh
+
+_SPEC = lambda x: (  # noqa: E731
+    isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple) and isinstance(x[1], str)
+)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_config_for(cfg) -> OptConfig:
+    # Adafactor for the 100B+ archs (AdamW moments would not fit per chip)
+    big = cfg.param_count() > 60e9
+    return OptConfig(kind="adafactor" if big else "adamw")
+
+
+def opt_shardings(o_structs, p_sh, mesh, p_specs=None, rules=None, fsdp=False):
+    """m/v mirror the param shardings; Adafactor's factored vr/vc inherit the
+    parent param's axes minus the factored-out dim (a replicated (R, d, h)
+    stat for a 340B model would not fit)."""
+    out = {"step": _rep(mesh)}
+    for key in o_structs:
+        if key == "step":
+            continue
+        if key in ("m", "v"):
+            out[key] = p_sh
+        else:
+            drop = -1 if key == "vr" else -2
+
+            def stat_sh(spec, drop=drop):
+                shape, dt, axes = spec
+                if len(shape) < 2:
+                    return _rep(mesh)
+                shape2 = tuple(np.delete(np.array(shape), drop))
+                axes2 = tuple(a for i, a in enumerate(axes)
+                              if i != len(axes) + drop)
+                from ..distributed.sharding import sharding_for_spec
+
+                return sharding_for_spec(shape2, axes2, mesh, rules, fsdp)
+
+            out[key] = jax.tree.map(stat_sh, p_specs, is_leaf=_SPEC)
+    return out
+
+
+def _batch_sharding(mesh, B: int, rules=None):
+    """Shard batch per rules['batch'] (default (pod,data)); drops trailing
+    axes until divisible, replicates as a last resort."""
+    want = (rules or {}).get("batch", ("pod", "data")) or ()
+    if not isinstance(want, tuple):
+        want = (want,)
+    axes = tuple(a for a in want if a in mesh.axis_names)
+    while axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if B % size == 0:
+            return NamedSharding(mesh, P(axes, None))
+        axes = axes[:-1]
+    return NamedSharding(mesh, P(None, None))
+
+
+def batch_specs(cfg, shape, mesh, rules):
+    B, S = shape.global_batch, shape.seq_len
+    structs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    bsh = _batch_sharding(mesh, B, rules)
+    sh = {"tokens": bsh, "labels": bsh}
+    if cfg.frontend == "audio_stub":
+        structs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        sh["frames"] = NamedSharding(mesh, P(bsh.spec[0], None, None))
+    if cfg.frontend == "vision_stub":
+        structs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        sh["patch_embeds"] = NamedSharding(mesh, P(bsh.spec[0], None, None))
+    return structs, sh
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def _build_lowered(cfg, shape, mesh, rules, tcfg: TrainConfig | None = None):
+    """Lower the cell's step function (train/prefill/decode) for ``cfg``."""
+    specs = param_specs(cfg)
+    p_structs = spec_struct(specs)
+    p_sh = tree_shardings(specs, mesh, rules, fsdp=cfg.fsdp)
+    bsh = _batch_sharding(mesh, shape.global_batch, rules)
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        o_structs = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), p_structs)
+        o_sh = opt_shardings(o_structs, p_sh, mesh, p_specs=specs, rules=rules,
+                             fsdp=cfg.fsdp)
+        b_structs, b_sh = batch_specs(cfg, shape, mesh, rules)
+        step = make_train_step(cfg, opt_cfg, tcfg or TrainConfig())
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        return jitted.lower(p_structs, o_structs, b_structs)
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        extras = _extras_structs(cfg, B, mesh, bsh)
+
+        def prefill_step(params, tokens, extras=None):
+            return forward_prefill(params, tokens, cfg, extras)
+
+        args = (p_structs, tok) + ((extras[0],) if extras else ())
+        shs = (p_sh, bsh) + ((extras[1],) if extras else ())
+        jitted = jax.jit(prefill_step, in_shardings=shs)
+        return jitted.lower(*args)
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    c_specs = cache_specs(cfg, B, S)
+    c_structs = spec_struct(c_specs)
+    c_sh = tree_shardings(c_specs, mesh, rules)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    def serve_step(params, token, cache):
+        return forward_decode(params, token, cache, cfg)
+
+    jitted = jax.jit(serve_step, in_shardings=(p_sh, bsh, c_sh),
+                     donate_argnums=(2,))
+    return jitted.lower(p_structs, tok, c_structs)
+
+
+def _pattern_period(cfg) -> int:
+    import math as _m
+
+    period = 1
+    if cfg.attn_every:
+        period = period * cfg.attn_every // _m.gcd(period, cfg.attn_every)
+    if cfg.n_experts and cfg.moe_every > 1:
+        period = period * cfg.moe_every // _m.gcd(period, cfg.moe_every)
+    return period
+
+
+def _probe_costs(cfg, shape, mesh, rules, tcfg=None):
+    """Scan bodies are costed once by HLO cost analysis, so flops/bytes/
+    collective counts from the full scanned program understate depth.  Fix:
+    compile two shallow UNSCANNED variants (1 and 2 pattern periods) and
+    extrapolate linearly in num_layers — exact for the periodic stack, and
+    the intercept captures embed/head/loss. Returns (flops, bytes, coll_detail).
+    """
+    import dataclasses as dc
+
+    from ..models.model import use_scan
+    from ..roofline.analysis import collective_bytes_from_hlo
+
+    if not use_scan(cfg):
+        return None
+    period = _pattern_period(cfg)
+    fd = cfg.first_dense
+    n1, n2 = fd + period, fd + 2 * period
+    if cfg.num_layers <= n2:
+        return None
+    samples = []
+    for n in (n1, n2):
+        cfg_n = dc.replace(cfg, num_layers=n, scan_layers=False)
+        lowered = _build_lowered(cfg_n, shape, mesh, rules, tcfg)
+        compiled = lowered.compile()
+        cost = _cost_dict(compiled)
+        col = collective_bytes_from_hlo(compiled.as_text())
+        samples.append((n, float(cost.get("flops", 0.0)),
+                        float(cost.get("bytes accessed", 0.0)),
+                        {k: v for k, v in col.items() if k != "_counts"}))
+    (na, fa, ba, ca), (nb, fb, bb, cb) = samples
+    L = cfg.num_layers
+
+    def extrap(va, vb):
+        slope = (vb - va) / (nb - na)
+        return max(va + slope * (L - na), 0.0)
+
+    detail = {k: extrap(ca[k], cb[k]) for k in ca}
+    return extrap(fa, fb), extrap(ba, bb), detail
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             rules_override: dict | None = None, tag: str = "",
+             probe: bool = True, cfg_override: dict | None = None,
+             tcfg: TrainConfig | None = None) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = _dc.replace(cfg, **cfg_override)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = make_rules(cfg, **(rules_override or {}))
+    if shape_name == "long_500k":
+        # context-parallel decode: KV/cache sequence sharded over model axis
+        rules["kv_seq"] = "model"
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": shape.kind, "tag": tag, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        with axis_env(mesh, rules):
+            lowered = _build_lowered(cfg, shape, mesh, rules, tcfg)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            probe_terms = _probe_costs(cfg, shape, mesh, rules, tcfg) if probe else None
+
+        ms = compiled.memory_analysis()
+        cost = _cost_dict(compiled)
+        hlo = compiled.as_text()
+        mf = model_flops_for(cfg, shape)
+        roof = analyze(arch, shape_name, mesh_name, chips, cost, hlo, mf)
+        if probe_terms is not None:
+            from ..roofline.analysis import Roofline
+
+            flops, nbytes, detail = probe_terms
+            roof = Roofline(
+                arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+                hlo_flops=flops, hlo_bytes=nbytes,
+                collective_bytes=float(sum(detail.values())),
+                collective_detail=detail, model_flops=mf,
+            ).finalize()
+            rec["cost_source"] = "probe-extrapolated"
+        else:
+            rec["cost_source"] = "exact"
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 1),
+            compile_s=round(t2 - t1, 1),
+            memory={
+                "argument_bytes": ms.argument_size_in_bytes,
+                "output_bytes": ms.output_size_in_bytes,
+                "temp_bytes": ms.temp_size_in_bytes,
+                "alias_bytes": ms.alias_size_in_bytes,
+                "temp_bytes_per_device": ms.temp_size_in_bytes // chips,
+                "argument_bytes_per_device": ms.argument_size_in_bytes // chips,
+            },
+            roofline=roof.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a report, not a crash
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}_{shape_name}_{mesh_name}{('_' + tag) if tag else ''}.json"
+    with open(out_dir / name, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    extra = (f" compile={rec.get('compile_s')}s dominant={rec['roofline']['dominant']}"
+             if rec["ok"] else f" {rec.get('error', '')[:120]}")
+    print(f"[{status}] {arch} {shape_name} {mesh_name}{extra}", flush=True)
+    return rec
+
+
+def _extras_structs(cfg, B, mesh, bsh):
+    if cfg.frontend == "audio_stub":
+        st = {"frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                             jnp.bfloat16)}
+        sh = {"frames": NamedSharding(mesh, P(bsh.spec[0], None, None))}
+        return st, sh
+    if cfg.frontend == "vision_stub":
+        st = {"patch_embeds": jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)}
+        sh = {"patch_embeds": NamedSharding(mesh, P(bsh.spec[0], None, None))}
+        return st, sh
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    out = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        cells = shape_cells(arch) if args.shape == "all" else [args.shape]
+        for shape_name in cells:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                f = out / f"{arch}_{shape_name}_{mesh_name}.json"
+                if args.skip_existing and f.exists():
+                    rec = json.loads(f.read_text())
+                    if rec.get("ok"):
+                        print(f"[SKIP] {arch} {shape_name} {mesh_name}")
+                        results.append(rec)
+                        continue
+                results.append(run_cell(arch, shape_name, mp, out))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+from . import layers, model
+from .model import (
+    cache_specs,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+    param_specs,
+)
+
+__all__ = [
+    "layers",
+    "model",
+    "cache_specs",
+    "forward_decode",
+    "forward_prefill",
+    "forward_train",
+    "init_params",
+    "param_specs",
+]

@@ -1,0 +1,560 @@
+"""Pure-JAX model layers: norms, rotary, GQA/SWA/MLA attention, MLPs,
+sort-based MoE, and the Mamba-2 SSD block.
+
+Conventions
+-----------
+* Parameters are nested dicts of arrays.  Each layer has a ``*_specs``
+  builder returning the same tree with ``(shape, dtype, logical_axes)``
+  leaves — the dry-run lowers from specs without allocating.
+* Activations are annotated with logical sharding axes via
+  ``repro.distributed.sharding.logical_constraint`` (no-op outside a mesh).
+* Compute dtype follows the input; softmax/normalisation run in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical_constraint as lc
+
+Params = dict
+Spec = tuple  # (shape, dtype, logical_axes)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": ((d,), "float32", (None,)), "bias": ((d,), "float32", (None,))}
+    return {"scale": ((d,), "float32", (None,))}
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf**2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (with partial-rotary support)
+# ---------------------------------------------------------------------------
+
+def apply_rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                 rotary_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) absolute token positions."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    if rd == 0:
+        return x
+    half = rd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rot, xp], axis=-1) if rd < hd else rot
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA full / sliding-window) with optional KV cache
+# ---------------------------------------------------------------------------
+
+def _dus_seq(buf, val, idx):
+    """dynamic_update_slice at (0, idx, 0, ...) with uniform int32 indices
+    (mixed int widths are an error under jax_enable_x64)."""
+    import jax.numpy as _jnp
+
+    zeros = tuple(_jnp.zeros((), _jnp.int32) for _ in range(buf.ndim - 2))
+    start = (_jnp.zeros((), _jnp.int32), idx.astype(_jnp.int32)) + zeros
+    return jax.lax.dynamic_update_slice(buf, val, start)
+
+
+def attention_specs(cfg) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.dtype
+    h_ax = "model" if cfg.attn_tp else None
+    kv_ax = "model" if (cfg.attn_tp and KV % 16 == 0) else None
+    p = {
+        "wq": ((d, H, hd), dt, (None, h_ax, None)),
+        "wk": ((d, KV, hd), dt, (None, kv_ax, None)),
+        "wv": ((d, KV, hd), dt, (None, kv_ax, None)),
+        "wo": ((H, hd, d), dt, (h_ax, None, None)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ((H, hd), dt, (h_ax, None))
+        p["bk"] = ((KV, hd), dt, (kv_ax, None))
+        p["bv"] = ((KV, hd), dt, (kv_ax, None))
+    return p
+
+
+def _sdpa(q, k, v, mask, H_per_kv):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd).
+
+    mask must be broadcastable to (B, KV, g, Sq, Sk) — callers pass
+    (1, 1, 1, Sq, Sk) for causal/bidir or (B, 1, 1, 1, Sk) for decode.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    q = q.reshape(B, Sq, KV, H_per_kv, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) / math.sqrt(hd)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(p: Params, x: jnp.ndarray, cfg, *, positions: jnp.ndarray,
+              mode: str = "causal", cache: Optional[dict] = None) -> tuple:
+    """Returns (out, new_cache).
+
+    mode: "causal" | "bidir" (encoder) | "decode" (single step w/ cache)
+    For cfg.attention == "swa" a band mask / rolling-buffer cache is used.
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    rd = int(cfg.rotary_pct * hd) if cfg.rotary_pct < 1.0 else hd
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = lc(q, "batch", "seq", "heads", None)
+    k = lc(k, "batch", "seq", "kv_heads", None)
+    if mode != "bidir":
+        q = apply_rotary(q, positions, cfg.rope_theta, rd)
+        k = apply_rotary(k, positions, cfg.rope_theta, rd)
+
+    window = cfg.window if cfg.attention == "swa" else 0
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        idx = cache["index"]
+        if window:
+            slot = idx % window
+            ck = _dus_seq(cache["k"], k, slot)
+            cv = _dus_seq(cache["v"], v, slot)
+            Smax = ck.shape[1]
+            valid = jnp.arange(Smax)[None, :] < jnp.minimum(idx + 1, Smax)
+        else:
+            ck = _dus_seq(cache["k"], k, idx)
+            cv = _dus_seq(cache["v"], v, idx)
+            Smax = ck.shape[1]
+            valid = jnp.arange(Smax)[None, :] <= idx
+        mask = valid[:, None, None, None, :]        # (1,1,1,1,Smax)
+        out = _sdpa(q, ck, cv, mask, H // KV)
+        new_cache = {"k": ck, "v": cv, "index": idx + 1}
+    else:
+        if mode == "causal":
+            i = jnp.arange(S)[:, None]
+            j = jnp.arange(S)[None, :]
+            mask = j <= i
+            if window:
+                mask &= (i - j) < window
+        else:
+            mask = jnp.ones((S, S), dtype=bool)
+        out = _sdpa(q, k, v, mask[None, None, None], H // KV)
+        if mode == "causal":
+            if window:
+                # rolling buffer holding the trailing ``window`` positions;
+                # slot layout: position p lives at p % window
+                if S <= window:
+                    pad = window - S
+                    tail_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    tail_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                else:
+                    tail_k = k[:, S - window:]
+                    tail_v = v[:, S - window:]
+                roll = S % window if S > window else 0
+                tail_k = jnp.roll(tail_k, roll, axis=1)
+                tail_v = jnp.roll(tail_v, roll, axis=1)
+                new_cache = {"k": tail_k, "v": tail_v, "index": jnp.int32(S)}
+            else:
+                new_cache = {"k": k, "v": v, "index": jnp.int32(S)}
+        else:
+            new_cache = None
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return lc(out, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention_specs(cfg) -> Params:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    dt = cfg.dtype
+    h_ax = "model" if cfg.attn_tp else None
+    return {
+        "wq": ((d, H, hd), dt, (None, h_ax, None)),
+        "wk": ((d, H, hd), dt, (None, h_ax, None)),
+        "wv": ((d, H, hd), dt, (None, h_ax, None)),
+        "wo": ((H, hd, d), dt, (h_ax, None, None)),
+    }
+
+
+def cross_attention(p: Params, x: jnp.ndarray, enc_kv: tuple, cfg) -> jnp.ndarray:
+    """enc_kv = (k, v) precomputed from encoder output: (B, Senc, H, hd)."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = _sdpa(q, k, v, jnp.ones((1, 1, 1, 1, 1), dtype=bool), 1)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_cross_kv(p: Params, enc_out: jnp.ndarray) -> tuple:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.dtype
+    return {
+        "wq": ((d, H, dn + dr), dt, (None, "model", None)),
+        "w_dkv": ((d, r + dr), dt, (None, None)),        # down: c_kv + shared k_rope
+        "kv_norm": {"scale": ((r,), "float32", (None,))},
+        "w_uk": ((r, H, dn), dt, (None, "model", None)),  # up: k_nope
+        "w_uv": ((r, H, dv), dt, (None, "model", None)),  # up: v
+        "wo": ((H, dv, d), dt, ("model", None, None)),
+    }
+
+
+def mla_attention(p: Params, x: jnp.ndarray, cfg, *, positions, mode="causal",
+                  cache: Optional[dict] = None) -> tuple:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rotary(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    c_kv = apply_norm(p["kv_norm"], c_kv, "rmsnorm")
+    k_rope = apply_rotary(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        idx = cache["index"]
+        c_kv = _dus_seq(cache["ckv"], c_kv, idx)
+        k_rope = _dus_seq(cache["krope"], k_rope, idx)
+        Sk = c_kv.shape[1]
+        valid = jnp.arange(Sk)[None, :] <= idx            # (1,Sk)
+        mask = valid[None, None]
+        new_cache = {"ckv": c_kv, "krope": k_rope, "index": idx + 1}
+    else:
+        Sk = S
+        i = jnp.arange(S)[:, None]
+        mask = (jnp.arange(S)[None, :] <= i)[None, None]
+        new_cache = {"ckv": c_kv, "krope": k_rope, "index": jnp.int32(S)} \
+            if mode == "causal" else None
+
+    # expand the compressed cache (decode recomputes k/v from latents — the
+    # MLA memory/compute trade)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (
+        jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
+    ) * scale
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return lc(out, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": ((d, f), dt, (None, "ffn")),
+            "w_up": ((d, f), dt, (None, "ffn")),
+            "w_down": ((f, d), dt, ("ffn", None)),
+        }
+    return {
+        "w_up": ((d, f), dt, (None, "ffn")),
+        "w_down": ((f, d), dt, ("ffn", None)),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        if act == "gelu":
+            h = jax.nn.gelu(h)
+        elif act == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            raise ValueError(act)
+    h = lc(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based capacity dispatch; EP over the model axis)
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg) -> Params:
+    d, f, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    dt = cfg.dtype
+    e_ax = "experts"  # mapped to model axis when E % tp == 0, else None
+    p = {
+        "router": ((d, E), "float32", (None, None)),
+        "experts": {
+            "w_gate": ((E, d, f), dt, (e_ax, None, "expert_ffn")),
+            "w_up": ((E, d, f), dt, (e_ax, None, "expert_ffn")),
+            "w_down": ((E, f, d), dt, (e_ax, "expert_ffn", None)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs(cfg, cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff))
+    return p
+
+
+def _moe_one_group(xf: jnp.ndarray, p: Params, cfg, cap: int):
+    """Sort-based capacity dispatch for ONE token group (N_loc, D)."""
+    N, D = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                                # (N,K)
+    gates = top_p / (top_p.sum(-1, keepdims=True) + 1e-9)
+
+    # aux load-balancing loss (Switch-style)
+    me = probs.mean(0)                               # mean router prob per expert
+    ce = jnp.zeros(E).at[top_i.reshape(-1)].add(1.0) / (N * K)
+    aux = E * jnp.sum(me * ce)
+
+    eid = top_i.reshape(-1)                          # (N*K,)
+    order = jnp.argsort(eid, stable=True)
+    eid_s = eid[order]
+    # rank within expert group
+    pos_in_e = jnp.arange(N * K) - jnp.searchsorted(eid_s, eid_s, side="left")
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, eid_s * cap + pos_in_e, E * cap)  # overflow -> dropped
+    token = order // K
+
+    xe = jnp.zeros((E * cap, D), xf.dtype).at[slot].set(xf[token], mode="drop")
+    xe = xe.reshape(E, cap, D)
+
+    w = p["experts"]
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", xe, w["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, w["w_up"])
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * u
+    else:
+        h = jax.nn.relu(jnp.einsum("ecd,edf->ecf", xe, w["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, w["w_down"]).reshape(E * cap, D)
+
+    contrib = ye.at[slot].get(mode="fill", fill_value=0.0)
+    gates_s = gates.reshape(-1)[order].astype(xf.dtype)
+    out = jnp.zeros((N, D), xf.dtype).at[token].add(
+        contrib * gates_s[:, None] * keep[:, None].astype(xf.dtype))
+    return out, aux
+
+
+def moe(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, aux_loss).
+
+    ``cfg.moe_groups`` > 1 enables GShard-style *local dispatch groups*: the
+    token stream splits into G groups (aligned with the data shards), each
+    group routes/sorts/drops independently with capacity ceil(N/G·K/E·cf).
+    The argsort and the dispatch scatter then never cross shard boundaries —
+    only the expert einsums touch the model axis (see §Perf h1d).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    G = getattr(cfg, "moe_groups", 0) or 1
+    if N % G != 0:
+        G = 1
+    n_loc = N // G
+    cap = int(math.ceil(n_loc * K / E * cfg.capacity_factor))
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    if G > 1:
+        xg = lc(xf.reshape(G, n_loc, D), "batch", None, None)
+        out, aux = jax.vmap(lambda xx: _moe_one_group(xx, p, cfg, cap))(xg)
+        out = out.reshape(N, D)
+        aux = aux.mean()
+    else:
+        out, aux = _moe_one_group(xf, p, cfg, cap)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xf[None], cfg.act)[0]
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    dt = cfg.dtype
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": ((d, 2 * di + 2 * N + H), dt, (None, "ffn")),
+        "conv_w": ((cfg.ssm_conv, conv_dim), dt, (None, "ffn")),
+        "conv_b": ((conv_dim,), dt, ("ffn",)),
+        "A_log": ((H,), "float32", (None,)),
+        "D": ((H,), "float32", (None,)),
+        "dt_bias": ((H,), "float32", (None,)),
+        "out_norm": {"scale": ((di,), "float32", (None,))},
+        "out_proj": ((di, d), dt, ("ffn", None)),
+    }
+
+
+def _ssd_chunked(xh, dt_h, A, B_s, C_s, chunk: int, h0=None):
+    """Chunked SSD scan (Mamba-2 Alg. state-space dual form).
+
+    xh:  (B,S,H,P) inputs,   dt_h: (B,S,H) positive step sizes
+    A:   (H,) negative,      B_s/C_s: (B,S,N) (single group)
+    h0:  optional initial state (B,H,P,N)
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bb, S, H, P = xh.shape
+    N = B_s.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xc = xh.reshape(Bb, nc, Q, H, P)
+    dtc = dt_h.reshape(Bb, nc, Q, H)
+    Bc = B_s.reshape(Bb, nc, Q, N)
+    Cc = C_s.reshape(Bb, nc, Q, N)
+
+    la = dtc * A            # (B,nc,Q,H), negative
+    cs = jnp.cumsum(la, axis=2)                     # inclusive cumsum
+    seg_total = cs[:, :, -1, :]                     # (B,nc,H)
+
+    # --- intra-chunk (diagonal blocks) --------------------------------------
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)      # (B,nc,Q,Q)
+    tri = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    expo = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # (B,nc,Q,Q,H)
+    expo = jnp.where(tri[None, None, :, :, None], expo, -jnp.inf)  # mask BEFORE exp
+    decay = jnp.exp(expo)
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]        # weight by dt_s
+    y = jnp.einsum("bctsh,bcshp->bcthp", scores, xc)
+
+    # --- chunk summary states ----------------------------------------------
+    dec_end = jnp.exp(seg_total[:, :, None, :] - cs)          # (B,nc,Q,H)
+    sb = jnp.einsum("bcsh,bcsn,bcshp->bchpn", dtc * dec_end, Bc, xc)
+
+    # --- inter-chunk recurrence ----------------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), sb.dtype)
+
+    def scan_fn(h, inp):
+        s_k, g_k = inp                               # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * jnp.exp(g_k)[:, :, None, None] + s_k
+        return h, h_prev
+
+    sb_t = jnp.moveaxis(sb, 1, 0)                    # (nc,B,H,P,N)
+    g_t = jnp.moveaxis(seg_total, 1, 0)              # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h0, (sb_t, g_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution --------------------------------------------
+    dec_in = jnp.exp(cs)                             # decay from chunk start
+    y = y + jnp.einsum("bctn,bcth,bchpn->bcthp", Cc, dec_in, h_prevs)
+    return y.reshape(Bb, S, H, P), h_final
+
+
+def mamba2_block(p: Params, x: jnp.ndarray, cfg, *, mode: str = "causal",
+                 cache: Optional[dict] = None, chunk: int = 128) -> tuple:
+    """Returns (out, new_cache); cache = {"h": (B,H,P,N), "conv": (B,K-1,conv_dim)}."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = di // P
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    conv_dim = di + 2 * N
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt_h = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    # depthwise causal conv over (x, B, C)
+    if mode == "decode":
+        assert cache is not None and S == 1
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B,K,conv)
+        new_conv = hist[:, 1:]
+        xbc_c = jnp.einsum("bkc,kc->bc", hist, p["conv_w"])[:, None] + p["conv_b"]
+    else:
+        # depthwise causal conv via grouped conv_general_dilated
+        kern = p["conv_w"].T[:, None, :]                        # (conv_dim,1,K)
+        xbc_t = xbc.transpose(0, 2, 1)                          # (B,conv,S)
+        conv = jax.lax.conv_general_dilated(
+            xbc_t, kern, window_strides=(1,), padding=[(K - 1, 0)],
+            feature_group_count=conv_dim)
+        xbc_c = conv.transpose(0, 2, 1) + p["conv_b"]
+        hist_tail = xbc[:, -(K - 1):] if K > 1 else xbc[:, :0]
+        if K > 1 and S < K - 1:
+            hist_tail = jnp.pad(hist_tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        new_conv = hist_tail
+    xbc_c = jax.nn.silu(xbc_c)
+    xs, B_s, C_s = jnp.split(xbc_c, [di, di + N], axis=-1)
+    xh = xs.reshape(B, -1, H, P)
+
+    A = -jnp.exp(p["A_log"])                                     # (H,) negative
+    if mode == "decode":
+        dt1 = dt_h[:, 0]                                         # (B,H)
+        a = jnp.exp(dt1 * A)                                     # (B,H)
+        h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt1, B_s[:, 0], xh[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", C_s[:, 0], h)[:, None]    # (B,1,H,P)
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h = _ssd_chunked(xh.astype(jnp.float32), dt_h,
+                            A, B_s.astype(jnp.float32), C_s.astype(jnp.float32),
+                            chunk, h0)
+        new_cache = {"h": h, "conv": new_conv} if mode == "causal" else None
+
+    y = y + p["D"][None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(B, -1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(p["out_norm"], y, "rmsnorm")
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache

@@ -1,0 +1,524 @@
+"""Config-driven model assembly: spec trees, init, and the three entry
+points (``forward_train``, ``forward_prefill``, ``forward_decode``) shared
+by all 10 assigned architectures.
+
+Layer stacking: architectures are built from *pattern groups* — a periodic
+layer pattern (period = lcm(attn_every, moe_every)) repeated R times.  When
+``scan_layers`` is enabled (default for deep configs), each group's
+parameters are stacked with a leading R dim and executed under
+``jax.lax.scan``: the HLO contains ONE copy of the pattern instead of L,
+which cuts compile time ~L-fold (the standard MaxText/Megatron-JAX trick)
+while keeping per-layer semantics identical (validated in tests against the
+unscanned path).
+
+Block layout per layer i:
+  mixer: attention (full/swa/mla) if cfg.is_attn_layer(i) else mamba2
+  ffn:   MoE if cfg.is_moe_layer(i) else dense MLP (absent when d_ff == 0)
+Encoder-decoder (whisper) adds an encoder stack + cross-attention and is
+never scanned (6 layers).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import logical_constraint as lc
+from . import layers as L
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# pattern groups
+# ---------------------------------------------------------------------------
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def use_scan(cfg) -> bool:
+    return (
+        getattr(cfg, "scan_layers", True)
+        and cfg.encoder_layers == 0
+        and cfg.num_layers >= 8
+    )
+
+
+def layer_groups(cfg) -> list[dict]:
+    """[{start, indices | (repeat, period)} ...] covering all layers."""
+    Lr = cfg.num_layers
+    if not use_scan(cfg):
+        return [{"start": 0, "scan": False, "indices": list(range(Lr))}]
+    period = 1
+    if cfg.attn_every:
+        period = _lcm(period, cfg.attn_every)
+    if cfg.n_experts and cfg.moe_every > 1:
+        period = _lcm(period, cfg.moe_every)
+    start = cfg.first_dense
+    body = Lr - start
+    repeat = body // period
+    rem_start = start + repeat * period
+    groups: list[dict] = []
+    if start:
+        groups.append({"start": 0, "scan": False, "indices": list(range(start))})
+    if repeat >= 2:
+        groups.append({"start": start, "scan": True, "repeat": repeat, "period": period})
+    else:
+        groups.append({"start": start, "scan": False,
+                       "indices": list(range(start, rem_start))})
+    if rem_start < Lr:
+        groups.append({"start": rem_start, "scan": False,
+                       "indices": list(range(rem_start, Lr))})
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg, i: int) -> Params:
+    p: Params = {"norm1": L.norm_specs(cfg, cfg.d_model)}
+    if cfg.is_attn_layer(i):
+        p["attn"] = L.mla_specs(cfg) if cfg.attention == "mla" else L.attention_specs(cfg)
+    else:
+        p["mamba"] = L.mamba2_specs(cfg)
+    if cfg.encoder_layers:
+        p["norm_x"] = L.norm_specs(cfg, cfg.d_model)
+        p["cross"] = L.cross_attention_specs(cfg)
+    if cfg.d_ff or cfg.is_moe_layer(i):
+        p["norm2"] = L.norm_specs(cfg, cfg.d_model)
+        p["ffn"] = L.moe_specs(cfg) if cfg.is_moe_layer(i) else L.mlp_specs(cfg)
+    return p
+
+
+_SPEC = lambda x: (  # noqa: E731
+    isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple) and isinstance(x[1], str)
+)
+
+
+def _stack_specs(spec_tree, repeat: int):
+    def leaf(s):
+        shape, dtype, axes = s
+        return ((repeat, *shape), dtype, (None, *axes))
+
+    return jax.tree.map(leaf, spec_tree, is_leaf=_SPEC)
+
+
+def _group_specs(cfg, g: dict):
+    if not g["scan"]:
+        return {"layers": [_layer_specs(cfg, i) for i in g["indices"]]}
+    return {
+        "pattern": [
+            _stack_specs(_layer_specs(cfg, g["start"] + pos), g["repeat"])
+            for pos in range(g["period"])
+        ]
+    }
+
+
+def param_specs(cfg) -> Params:
+    V, d = cfg.padded_vocab, cfg.d_model
+    dt = cfg.dtype
+    specs: Params = {
+        "embed": ((V, d), dt, ("vocab", None)),
+        "blocks": [_group_specs(cfg, g) for g in layer_groups(cfg)],
+        "final_norm": L.norm_specs(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ((d, V), dt, (None, "vocab"))
+    if cfg.encoder_layers:
+        specs["encoder"] = {
+            "layers": [
+                {
+                    "norm1": L.norm_specs(cfg, d),
+                    "attn": L.attention_specs(cfg),
+                    "norm2": L.norm_specs(cfg, d),
+                    "ffn": L.mlp_specs(cfg),
+                }
+                for _ in range(cfg.encoder_layers)
+            ],
+            "final_norm": L.norm_specs(cfg, d),
+        }
+    if cfg.frontend == "vision_stub":
+        specs["patch_proj"] = ((d, d), dt, (None, None))
+    return specs
+
+
+def init_params(cfg, key) -> Params:
+    """Materialise parameters (smoke tests / real training of small models)."""
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_SPEC)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, (shape, dtype, axes) in zip(keys, leaves):
+        jdt = jnp.bfloat16 if dtype == "bfloat16" else jnp.dtype(dtype)
+        if len(shape) == 1:
+            out.append(jnp.zeros(shape, jdt))
+            continue
+        fan_in = shape[-2] if len(shape) >= 2 else 1
+        std = min(0.02, 1.0 / math.sqrt(max(fan_in, 1)))
+        out.append((jax.random.normal(k, shape, jnp.float32) * std).astype(jdt))
+    params = jax.tree.unflatten(treedef, out)
+
+    def fix(path, x):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if name.endswith("scale"):
+            return jnp.ones_like(x)
+        if name.endswith("A_log"):
+            lin = jnp.log(jnp.linspace(1.0, 16.0, x.shape[-1], dtype=jnp.float32))
+            return jnp.broadcast_to(lin, x.shape)
+        if name.endswith("/D"):
+            return jnp.ones_like(x)
+        if name.endswith("dt_bias"):
+            return jnp.full_like(x, 0.5)
+        return x
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(positions, d, dtype):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _embed(params, tokens, cfg, extras) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    # patch prefix only applies to full-sequence passes, never decode steps
+    if (cfg.frontend == "vision_stub" and extras and "patch_embeds" in extras
+            and x.shape[1] > 1):
+        pe = jnp.einsum("bnd,de->bne", extras["patch_embeds"].astype(x.dtype),
+                        params["patch_proj"])
+        n = pe.shape[1]
+        if n >= x.shape[1]:
+            x = pe[:, : x.shape[1]]
+        else:
+            x = jnp.concatenate([pe, x[:, n:]], axis=1)
+    return lc(x, "batch", "seq", None)
+
+
+def _encode(params, frames, cfg) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    ep = params["encoder"]
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else frames.dtype)
+    x = x + _sinusoidal(pos, cfg.d_model, x.dtype)
+    for lp in ep["layers"]:
+        h = L.apply_norm(lp["norm1"], x, cfg.norm)
+        a, _ = L.attention(lp["attn"], h, cfg, positions=pos, mode="bidir")
+        x = x + a
+        h = L.apply_norm(lp["norm2"], x, cfg.norm)
+        x = x + L.mlp(lp["ffn"], h, cfg.act)
+    return L.apply_norm(ep["final_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# one decoder layer
+# ---------------------------------------------------------------------------
+
+def _layer(lp, x, cfg, i, *, positions, mode, cache, enc_kv_i, aux):
+    h = L.apply_norm(lp["norm1"], x, cfg.norm)
+    if cfg.is_attn_layer(i):
+        if cfg.attention == "mla":
+            a, new_cache = L.mla_attention(lp["attn"], h, cfg, positions=positions,
+                                           mode=mode, cache=cache)
+        else:
+            a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
+                                       mode=mode, cache=cache)
+    else:
+        a, new_cache = L.mamba2_block(lp["mamba"], h, cfg,
+                                      mode="decode" if mode == "decode" else "causal",
+                                      cache=cache)
+    x = x + a
+    if "cross" in lp and enc_kv_i is not None:
+        h = L.apply_norm(lp["norm_x"], x, cfg.norm)
+        x = x + L.cross_attention(lp["cross"], h, enc_kv_i, cfg)
+    if "ffn" in lp:
+        h = L.apply_norm(lp["norm2"], x, cfg.norm)
+        if cfg.is_moe_layer(i):
+            f, a2 = L.moe(lp["ffn"], h, cfg)
+            aux = aux + a2
+        else:
+            f = L.mlp(lp["ffn"], h, cfg.act)
+        x = x + f
+    return lc(x, "batch", "seq", None), new_cache, aux
+
+
+def _remat_wrap(fn, cfg):
+    """Apply the configured remat policy: 'full' saves nothing (recompute
+    everything in backward); 'dots' saves matmul outputs (selective remat —
+    recompute only cheap elementwise/norm ops)."""
+    if not cfg.remat:
+        return fn
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _maybe_remat(fn, cfg):
+    return _remat_wrap(fn, cfg)
+
+
+# ---------------------------------------------------------------------------
+# running all layers (scan-aware)
+# ---------------------------------------------------------------------------
+
+def _empty_cache_like(cfg, i):
+    """Structure placeholder for prefill cache collection."""
+    return None
+
+
+def _apply_blocks(params, x, cfg, *, positions, mode, cache, enc_kv, aux,
+                  collect_cache: bool):
+    """Runs every layer; returns (x, new_cache_blocks, aux)."""
+    groups = layer_groups(cfg)
+    new_blocks = []
+    for gi, g in enumerate(groups):
+        gp = params["blocks"][gi]
+        gcache = cache[gi] if cache is not None else None
+        if not g["scan"]:
+            outs = []
+            for li, i in enumerate(g["indices"]):
+                lcache = gcache["layers"][li] if gcache is not None else None
+
+                def one(x_, aux_, lcache_, lp=gp if False else None, li=li, i=i):
+                    return _layer(gp["layers"][li], x_, cfg, i, positions=positions,
+                                  mode=mode, cache=lcache_,
+                                  enc_kv_i=enc_kv[i] if enc_kv else None, aux=aux_)
+
+                if cfg.remat and mode == "causal" and not collect_cache:
+                    def body(x_, aux_, li=li, i=i):
+                        y, _, a = _layer(gp["layers"][li], x_, cfg, i,
+                                         positions=positions, mode=mode, cache=None,
+                                         enc_kv_i=enc_kv[i] if enc_kv else None,
+                                         aux=aux_)
+                        return y, a
+
+                    x, aux = _remat_wrap(body, cfg)(x, aux)
+                    outs.append(None)
+                else:
+                    x, c, aux = one(x, aux, lcache)
+                    outs.append(c)
+            new_blocks.append({"layers": outs})
+        else:
+            period, repeat = g["period"], g["repeat"]
+            start = g["start"]
+
+            def scan_body(carry, xs, start=start, period=period, gi=gi):
+                x_, aux_ = carry
+                pat_params, pat_cache = xs
+                new_pat_cache = []
+                for pos in range(period):
+                    i = start + pos  # kind is periodic; representative index
+                    x_, c, aux_ = _layer(
+                        pat_params[pos], x_, cfg, i, positions=positions,
+                        mode=mode,
+                        cache=pat_cache[pos] if pat_cache is not None else None,
+                        enc_kv_i=None, aux=aux_)
+                    new_pat_cache.append(c)
+                if any(c is not None for c in new_pat_cache):
+                    return (x_, aux_), new_pat_cache
+                return (x_, aux_), None
+
+            body = _remat_wrap(scan_body, cfg)
+            pat_params = gp["pattern"]
+            pat_cache = gcache["pattern"] if gcache is not None else None
+            want_cache = collect_cache or mode == "decode"
+            if not want_cache and pat_cache is None:
+                # training: no cache threading at all
+                def scan_body_nc(carry, pat_params_slice, start=start, period=period):
+                    x_, aux_ = carry
+                    for pos in range(period):
+                        i = start + pos
+                        x_, _, aux_ = _layer(pat_params_slice[pos], x_, cfg, i,
+                                             positions=positions, mode=mode,
+                                             cache=None, enc_kv_i=None, aux=aux_)
+                    return (x_, aux_), None
+
+                b = _remat_wrap(scan_body_nc, cfg)
+                (x, aux), _ = jax.lax.scan(b, (x, aux), pat_params)
+                new_blocks.append(None)
+            else:
+                (x, aux), ys = jax.lax.scan(body, (x, aux), (pat_params, pat_cache))
+                new_blocks.append({"pattern": ys})
+    return x, new_blocks, aux
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _prepare_encdec(params, positions, x, cfg, extras):
+    if not cfg.encoder_layers:
+        return x, None
+    x = x + _sinusoidal(positions, cfg.d_model, x.dtype)
+    enc_out = _encode(params, extras["frames"], cfg)
+    groups = layer_groups(cfg)
+    assert not any(g["scan"] for g in groups)
+    enc_kv = []
+    for g in groups:
+        for li, i in enumerate(g["indices"]):
+            enc_kv.append(L.encode_cross_kv(
+                params["blocks"][0]["layers"][li]["cross"], enc_out))
+    return x, enc_kv
+
+
+def lm_head_of(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward_train(params, tokens, cfg, extras: Optional[dict] = None,
+                  return_hidden: bool = False):
+    """tokens (B,S) -> logits (B,S,V) float32 (or hidden states when
+    ``return_hidden``); also returns the MoE aux loss."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed(params, tokens, cfg, extras)
+    x, enc_kv = _prepare_encdec(params, positions, x, cfg, extras)
+    aux = jnp.zeros((), jnp.float32)
+    x, _, aux = _apply_blocks(params, x, cfg, positions=positions, mode="causal",
+                              cache=None, enc_kv=enc_kv, aux=aux,
+                              collect_cache=False)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head_of(params, cfg)).astype(jnp.float32)
+    return lc(logits, "batch", "seq", "vocab"), aux
+
+
+def _pad_cache_seq(cache_blocks, max_len: int):
+    """Grow attention cache buffers to ``max_len`` slots (seq axis)."""
+
+    def pad(c, seq_axis):
+        out = dict(c)
+        for key in ("k", "v", "ckv", "krope"):
+            if key in out:
+                arr = out[key]
+                S = arr.shape[seq_axis]
+                if S < max_len:
+                    pads = [(0, 0)] * arr.ndim
+                    pads[seq_axis] = (0, max_len - S)
+                    out[key] = jnp.pad(arr, pads)
+        return out
+
+    new = []
+    for b in cache_blocks:
+        if b is None:
+            new.append(None)
+        elif "layers" in b:
+            new.append({"layers": [pad(c, 1) if c else c for c in b["layers"]]})
+        else:
+            new.append({"pattern": [pad(c, 2) if c else c for c in b["pattern"]]})
+    return new
+
+
+def forward_prefill(params, tokens, cfg, extras: Optional[dict] = None,
+                    max_len: Optional[int] = None):
+    """Returns (last-token logits (B,V), cache pytree)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed(params, tokens, cfg, extras)
+    x, enc_kv = _prepare_encdec(params, positions, x, cfg, extras)
+    aux = jnp.zeros((), jnp.float32)
+    x, blocks, aux = _apply_blocks(params, x, cfg, positions=positions,
+                                   mode="causal", cache=None, enc_kv=enc_kv,
+                                   aux=aux, collect_cache=True)
+    x = L.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head_of(params, cfg)
+                        ).astype(jnp.float32)[:, 0]
+    if max_len is not None and max_len > S and cfg.attention != "swa":
+        blocks = _pad_cache_seq(blocks, max_len)
+    return logits, {"blocks": blocks, "enc_kv": enc_kv, "pos": jnp.int32(S)}
+
+
+def forward_decode(params, token, cache, cfg, extras: Optional[dict] = None):
+    """token (B,1) + cache -> (logits (B,V), new cache). One decode step."""
+    B = token.shape[0]
+    idx = cache["pos"]
+    positions = jnp.broadcast_to(idx[None, None] if jnp.ndim(idx) == 0 else idx,
+                                 (B, 1)).astype(jnp.int32)
+    x = _embed(params, token, cfg, extras)
+    if cfg.encoder_layers:
+        x = x + _sinusoidal(positions, cfg.d_model, x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    x, blocks, aux = _apply_blocks(params, x, cfg, positions=positions,
+                                   mode="decode", cache=cache["blocks"],
+                                   enc_kv=cache.get("enc_kv"), aux=aux,
+                                   collect_cache=True)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head_of(params, cfg)
+                        ).astype(jnp.float32)[:, 0]
+    return logits, {"blocks": blocks, "enc_kv": cache.get("enc_kv"),
+                    "pos": idx + 1}
+
+
+# ---------------------------------------------------------------------------
+# cache specs (dry-run serve_step inputs)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_specs(cfg, i: int, batch: int, seq_len: int):
+    dt = cfg.dtype
+    if cfg.is_attn_layer(i):
+        if cfg.attention == "mla":
+            return {
+                "ckv": ((batch, seq_len, cfg.kv_lora_rank), dt,
+                        ("batch", "kv_seq", None)),
+                "krope": ((batch, seq_len, cfg.qk_rope_head_dim), dt,
+                          ("batch", "kv_seq", None)),
+                "index": ((), "int32", ()),
+            }
+        S = min(seq_len, cfg.window) if cfg.attention == "swa" else seq_len
+        return {
+            "k": ((batch, S, cfg.num_kv_heads, cfg.hd), dt,
+                  ("batch", "kv_seq", "kv_heads", None)),
+            "v": ((batch, S, cfg.num_kv_heads, cfg.hd), dt,
+                  ("batch", "kv_seq", "kv_heads", None)),
+            "index": ((), "int32", ()),
+        }
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * cfg.ssm_state
+    return {
+        "h": ((batch, H, cfg.ssm_head_dim, cfg.ssm_state), "float32",
+              ("batch", "heads", None, None)),
+        "conv": ((batch, cfg.ssm_conv - 1, conv_dim), dt,
+                 ("batch", None, "ffn")),
+    }
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> Any:
+    """Spec tree for a cache holding ``seq_len`` tokens (decode dry-run)."""
+    blocks = []
+    for g in layer_groups(cfg):
+        if not g["scan"]:
+            blocks.append({"layers": [
+                _layer_cache_specs(cfg, i, batch, seq_len) for i in g["indices"]
+            ]})
+        else:
+            blocks.append({"pattern": [
+                _stack_specs(_layer_cache_specs(cfg, g["start"] + pos, batch, seq_len),
+                             g["repeat"])
+                for pos in range(g["period"])
+            ]})
+    out = {"blocks": blocks, "pos": ((), "int32", ())}
+    if cfg.encoder_layers:
+        out["enc_kv"] = [
+            (((batch, cfg.encoder_seq, cfg.num_heads, cfg.hd), cfg.dtype,
+              ("batch", None, "heads", None)),
+             ((batch, cfg.encoder_seq, cfg.num_heads, cfg.hd), cfg.dtype,
+              ("batch", None, "heads", None)))
+            for _ in range(cfg.num_layers)
+        ]
+    else:
+        out["enc_kv"] = None
+    return out

@@ -1,0 +1,3 @@
+from .analysis import Roofline, analyze, collective_bytes_from_hlo, model_flops_for
+
+__all__ = ["Roofline", "analyze", "collective_bytes_from_hlo", "model_flops_for"]

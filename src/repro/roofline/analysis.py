@@ -1,0 +1,167 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes / (chips * HBM_BW)
+  collective term = collective_bytes / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` runs on the SPMD-*partitioned* per-device
+module, so its flops/bytes are already per-device: the formulas above are
+evaluated with global values = per_device * chips, which cancels the chips
+factor.  Collective bytes are parsed from the partitioned HLO text (sum of
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute) and are likewise per-device.
+
+Caveat recorded in EXPERIMENTS.md: the CPU-backend HLO cost model is
+fusion-blind, so HLO_bytes over-counts intermediate traffic relative to a
+fused TPU executable — the memory term is an upper bound; deltas between
+configurations remain meaningful.
+
+Hardware model (TPU v5e-class, per the brief):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (one direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes, summed over ops (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # result shape is on the LHS: "%name = <shape(s)> opcode(...)"
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        op = None
+        rhs_head = rhs.lstrip()
+        for k in _COLLECTIVES:
+            if rhs_head.startswith(k) or f" {k}(" in rhs_head[:160] or rhs_head.startswith(f"({k}"):
+                op = k
+                break
+            # "%x = f32[..] all-reduce(...)" — opcode appears after shapes
+            m = re.match(r"^[^(]*?\b" + k + r"\b", rhs_head.split("(")[0]) if "(" in rhs_head else None
+            if m:
+                op = k
+                break
+        if op is None:
+            continue
+        shapes_part = rhs_head.split(op)[0]
+        nbytes = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(shapes_part))
+        if nbytes == 0:
+            continue
+        out[op] += nbytes
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per device (partitioned module)
+    hlo_bytes: float             # per device
+    collective_bytes: float      # per device
+    collective_detail: dict
+    model_flops: float           # 6*N*D (or 6*N_active*D) useful flops, global
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        # global = per_device * chips; the chips factor in the brief's
+        # denominators cancels against it
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / LINK_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flops / (bound_time * peak compute)."""
+        denom = self.bound_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "collective_detail": self.collective_detail,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, n_active: Optional[int] = None) -> float:
+    """6*N*D for train, 2*N*D for inference (per forward); D = tokens."""
+    n = n_active if n_active is not None else cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_tok = 6 * n if shape.kind == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float) -> Roofline:
+    col = collective_bytes_from_hlo(hlo_text)
+    detail = {k: v for k, v in col.items() if k != "_counts"}
+    total_col = sum(detail.values())
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=float(total_col),
+        collective_detail={**detail, "counts": col.get("_counts", {})},
+        model_flops=model_flops,
+    ).finalize()

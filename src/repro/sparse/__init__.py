@@ -1,0 +1,25 @@
+from .csc import CSC, csc_from_coo, csc_to_dense, csc_transpose_pattern
+from .gen import (
+    SUITES,
+    asic_like,
+    circuit_jacobian,
+    grid_laplacian,
+    make_suite_matrix,
+    rc_ladder,
+)
+from .io import read_matrix_market, write_matrix_market
+
+__all__ = [
+    "CSC",
+    "csc_from_coo",
+    "csc_to_dense",
+    "csc_transpose_pattern",
+    "SUITES",
+    "asic_like",
+    "circuit_jacobian",
+    "grid_laplacian",
+    "make_suite_matrix",
+    "rc_ladder",
+    "read_matrix_market",
+    "write_matrix_market",
+]

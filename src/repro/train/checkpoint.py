@@ -1,0 +1,157 @@
+"""Sharded, fault-tolerant checkpointing (msgpack + zstd, no orbax).
+
+Layout:  <dir>/step_<N>/
+           manifest.json     — leaf paths, shapes, dtypes, content hashes
+           shard_<host>.msgpack.zst — this host's leaf bytes
+
+Guarantees:
+  * atomic commit: written to ``step_<N>.tmp`` then renamed;
+  * integrity: per-leaf blake2 hashes verified on restore;
+  * elasticity: arrays are saved unsharded-logical (host gathers its
+    addressable shards); restore re-device_puts under whatever sharding the
+    new mesh prescribes, so the device count may change between runs;
+  * retention: ``keep`` newest checkpoints survive garbage collection;
+  * async: ``save(..., blocking=False)`` hands off to a writer thread.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import zstandard
+
+import jax
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "Checkpointer"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(directory, step: int, tree, *, host_id: int = 0, keep: int = 3,
+                    blocking: bool = True) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        tmp = directory / f"step_{step}.tmp"
+        final = directory / f"step_{step}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        comp = zstandard.ZstdCompressor(level=3)
+        manifest = {"step": step, "leaves": {}}
+        payload = {}
+        for key, arr in arrays.items():
+            raw = arr.tobytes()
+            manifest["leaves"][key] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "hash": hashlib.blake2b(raw, digest_size=16).hexdigest(),
+            }
+            payload[key] = comp.compress(raw)
+        with open(tmp / f"shard_{host_id}.msgpack.zst", "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        _gc(directory, keep)
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+    return directory / f"step_{step}"
+
+
+def _gc(directory: Path, keep: int):
+    steps = sorted(
+        (int(p.name.split("_")[1]), p)
+        for p in directory.glob("step_*")
+        if p.is_dir() and not p.name.endswith(".tmp")
+    )
+    for _s, p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in directory.glob("step_*")
+        if p.is_dir() and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, step: int, like, *, host_id: int = 0,
+                       shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for elastic re-sharding onto the current mesh."""
+    path = Path(directory) / f"step_{step}"
+    with open(path / "manifest.json") as f:
+        manifest = json.load(f)
+    with open(path / f"shard_{host_id}.msgpack.zst", "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    decomp = zstandard.ZstdDecompressor()
+
+    flat_like, treedef = _flatten(like)
+    flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = {}
+    for key, spec in manifest["leaves"].items():
+        if key not in flat_like:
+            continue
+        raw = decomp.decompress(payload[key])
+        if hashlib.blake2b(raw, digest_size=16).hexdigest() != spec["hash"]:
+            raise IOError(f"checkpoint corruption at leaf {key}")
+        arr = np.frombuffer(raw, dtype=spec["dtype"]).reshape(spec["shape"]).copy()
+        if key in flat_sh and flat_sh[key] is not None:
+            arr = jax.device_put(arr, flat_sh[key])
+        out[key] = arr
+    missing = set(flat_like) - set(out)
+    if missing:
+        raise IOError(f"checkpoint missing leaves: {sorted(missing)[:5]} ...")
+    leaves = [out[k] for k in flat_like]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    """save-every-N helper with preemption flush (see train/fault.py)."""
+
+    def __init__(self, directory, every: int = 100, keep: int = 3, host_id: int = 0):
+        self.directory = Path(directory)
+        self.every = every
+        self.keep = keep
+        self.host_id = host_id
+
+    def maybe_save(self, step: int, tree, force: bool = False, blocking: bool = True):
+        if force or (self.every and step % self.every == 0 and step > 0):
+            return save_checkpoint(self.directory, step, tree, host_id=self.host_id,
+                                   keep=self.keep, blocking=blocking)
+        return None
+
+    def resume(self, like, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, 0
+        tree = restore_checkpoint(self.directory, step, like,
+                                  host_id=self.host_id, shardings=shardings)
+        return tree, step

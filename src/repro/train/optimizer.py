@@ -1,0 +1,152 @@
+"""Optimizers (pure-pytree, no external deps): AdamW and Adafactor.
+
+AdamW keeps fp32 first/second moments (ZeRO-1: the launcher shards them over
+the data axis).  Adafactor factors the second moment into row/col statistics
+— the default for the 340B-class archs where full AdamW state doesn't fit.
+Both support global-norm clipping and a linear-warmup cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "cosine_lr", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def _factored_dims(shape):
+    """Adafactor factors the two largest trailing dims of >=2D params."""
+    if len(shape) < 2:
+        return None
+    return (len(shape) - 2, len(shape) - 1)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.kind == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+    if cfg.kind == "adafactor":
+        def vrow(p):
+            d = _factored_dims(p.shape)
+            if d is None:
+                return jnp.zeros(p.shape, jnp.float32)
+            s = list(p.shape)
+            s.pop(d[1])
+            return jnp.zeros(tuple(s), jnp.float32)
+
+        def vcol(p):
+            d = _factored_dims(p.shape)
+            if d is None:
+                return jnp.zeros((1,), jnp.float32)
+            s = list(p.shape)
+            s.pop(d[0])
+            return jnp.zeros(tuple(s), jnp.float32)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+        }
+    raise ValueError(cfg.kind)
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) if cfg.clip_norm else 1.0
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        new_state = {"step": step, "m": new_m, "v": new_v}
+    else:  # adafactor
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32) * scale
+            d = _factored_dims(p.shape)
+            if d is None:
+                vr_n = decay * vr + (1 - decay) * g * g
+                u = g / (jnp.sqrt(vr_n) + cfg.eps)
+                vc_n = vc
+            else:
+                r, c = d
+                vr_n = decay * vr + (1 - decay) * (g * g).mean(axis=c)
+                vc_n = decay * vc + (1 - decay) * (g * g).mean(axis=r)
+                rfac = vr_n / jnp.maximum(vr_n.mean(axis=-1, keepdims=True), 1e-30)
+                vhat = jnp.expand_dims(rfac, c) * jnp.expand_dims(vc_n, r)
+                u = g / (jnp.sqrt(vhat) + cfg.eps)
+            # update clipping (Adafactor d=1.0)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_n, vc_n
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_vr = jax.tree.leaves(state["vr"])
+        flat_vc = jax.tree.leaves(state["vc"])
+        outs = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_state = {
+            "step": step,
+            "vr": jax.tree.unflatten(tdef, [o[1] for o in outs]),
+            "vc": jax.tree.unflatten(tdef, [o[2] for o in outs]),
+        }
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, new_state, metrics

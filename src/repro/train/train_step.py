@@ -1,0 +1,124 @@
+"""Training step factory: next-token loss, grad accumulation, remat, and
+optional int8-compressed gradient reduction.
+
+The step is a pure function jitted with explicit in/out shardings by the
+launcher; data parallelism's gradient all-reduce is inserted by GSPMD from
+the batch sharding.  With ``compress_grads`` the reduction is made explicit
+(shard_map over the data axis) and quantised to int8 with a per-tensor
+scale before crossing the wire — see distributed/collectives.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import forward_train
+from .optimizer import OptConfig, apply_updates
+
+__all__ = ["TrainConfig", "loss_fn", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    aux_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-4
+    compress_grads: bool = False
+    ce_chunk: int = 512          # sequence chunk for the CE scan
+
+
+def _chunked_ce(x, head, labels, chunk: int):
+    """Cross-entropy without materialising (B,S,V): scan over S-chunks.
+
+    x (B,S,d), head (d,V), labels (B,S) -> (nll_mean, z_mean).
+    """
+    from ..distributed.sharding import logical_constraint as lc
+
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    rem = S - nc * chunk
+
+    def chunk_loss(xc, lb):
+        logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+        logits = lc(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum(), (lse**2).sum()
+
+    if nc > 0:
+        xm = x[:, : nc * chunk].reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+        lm = labels[:, : nc * chunk].reshape(B, nc, chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            nll, z = chunk_loss(*inp)
+            return (carry[0] + nll, carry[1] + z), None
+
+        (nll, z), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xm, lm))
+    else:
+        nll = z = jnp.zeros(())
+    if rem:
+        n2, z2 = chunk_loss(x[:, nc * chunk :], labels[:, nc * chunk :])
+        nll, z = nll + n2, z + z2
+    n = B * S
+    return nll / n, z / n
+
+
+def loss_fn(params, batch, cfg, tcfg: TrainConfig):
+    """Causal LM loss with MoE aux and z-loss (stability, Megatron-style)."""
+    from ..models.model import lm_head_of
+
+    extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    x, aux = forward_train(params, batch["tokens"], cfg, extras or None,
+                           return_hidden=True)
+    nll, z = _chunked_ce(x, lm_head_of(params, cfg), batch["labels"], tcfg.ce_chunk)
+    loss = nll + tcfg.aux_loss_coef * aux + tcfg.z_loss_coef * z
+    return loss, {"nll": nll, "aux": aux, "z": z}
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, cfg, tcfg)
+            return g, loss, m
+
+        # gradient accumulation over leading microbatch splits
+        def split(x):
+            B = x.shape[0]
+            mb = tcfg.microbatches
+            return x.reshape(mb, B // mb, *x.shape[1:])
+
+        mbatch = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            g_acc, l_acc = carry
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, cfg, tcfg)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), m
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, loss_sum), ms = jax.lax.scan(body, (g0, jnp.zeros(())), mbatch)
+        inv = 1.0 / tcfg.microbatches
+        g = jax.tree.map(lambda x: x * inv, g)
+        m = jax.tree.map(lambda x: x.mean(), ms)
+        return g, loss_sum * inv, m
+
+    def step(params, opt_state, batch):
+        grads, loss, m = grads_of(params, batch)
+        if tcfg.compress_grads:
+            from ..distributed.collectives import fake_quantize_grads
+
+            grads = fake_quantize_grads(grads)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **m, **om}
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,22 @@
+import os
+
+# Tests run on the host CPU with a single device (the dry-run sets its own
+# device count in a separate process).  x64 is enabled because the GLU
+# numeric oracles and circuit simulation are validated in float64.
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

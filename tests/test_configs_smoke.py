@@ -1,0 +1,77 @@
+"""Per-architecture smoke tests (deliverable f): reduced config, one forward
+and one train step on CPU, asserting output shapes and finiteness."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_cells
+from repro.models import forward_train, init_params
+from repro.train import OptConfig, TrainConfig, init_opt_state, make_train_step
+
+
+def _batch(cfg, key, B=2, S=16):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model),
+                                            jnp.float32)
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = forward_train(params, batch["tokens"], cfg,
+                                {k: v for k, v in batch.items()
+                                 if k not in ("tokens", "labels")} or None)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, key)
+    opt_cfg = OptConfig(lr=1e-3, warmup=1, total_steps=10)
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg, TrainConfig()))
+    params2, opt2, metrics = step(params, opt, _batch(cfg, key))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10
+
+
+def test_shape_cells_skips():
+    """long_500k only for sub-quadratic archs (brief-mandated skips)."""
+    long_ok = {a for a in list_archs() if "long_500k" in shape_cells(a)}
+    assert long_ok == {"jamba-v0.1-52b", "mamba2-2.7b", "mixtral-8x7b"}
+    total = sum(len(shape_cells(a)) for a in list_archs())
+    assert total == 33
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_divisibility(arch):
+    """Production TP degree (16) divides the sharded dims (or the rule
+    resolver will replicate — verify the important ones do divide)."""
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    if cfg.attn_tp and cfg.attention != "mla" and cfg.attention != "none":
+        assert cfg.num_heads % 16 == 0

@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    JaxFactorizer,
+    build_plan,
+    dependencies_doubleu,
+    dependencies_relaxed,
+    dependencies_upattern,
+    factorize_numpy,
+    levelize_relaxed,
+    symbolic_fillin_etree,
+    symbolic_fillin_gp,
+    trisolve_numpy,
+)
+from repro.distributed.collectives import dequantize_int8, quantize_int8
+from repro.sparse import circuit_jacobian, csc_from_coo
+
+
+@st.composite
+def random_circuit_matrix(draw):
+    n = draw(st.integers(8, 80))
+    deg = draw(st.floats(1.5, 6.0))
+    seed = draw(st.integers(0, 10_000))
+    asym = draw(st.floats(0.0, 0.8))
+    return circuit_jacobian(n, avg_degree=deg, seed=seed, asym=asym)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_circuit_matrix())
+def test_relaxed_deps_always_superset(A):
+    As = symbolic_fillin_gp(A)
+    exact = (set(zip(*map(list, dependencies_upattern(As))))
+             | set(zip(*map(list, dependencies_doubleu(As)))))
+    relaxed = set(zip(*map(list, dependencies_relaxed(As))))
+    assert exact <= relaxed
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_circuit_matrix())
+def test_levelization_topological_and_complete(A):
+    As = symbolic_fillin_gp(A)
+    lv = levelize_relaxed(As)
+    src, dst = dependencies_relaxed(As)
+    if len(src):
+        assert (lv.levels[dst] > lv.levels[src]).all()
+    assert np.bincount(lv.levels, minlength=lv.num_levels).sum() == As.n
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_circuit_matrix())
+def test_parallel_factorization_equals_sequential(A):
+    """The central invariant: level-parallel GLU == sequential Alg. 2."""
+    As = symbolic_fillin_gp(A)
+    plan = build_plan(As)
+    oracle = factorize_numpy(As, As.filled_csc(A).data)
+    out = np.asarray(JaxFactorizer(plan, dtype=jnp.float64).factorize(
+        np.asarray(A.data)))
+    np.testing.assert_allclose(out, oracle, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_circuit_matrix(), st.integers(0, 1000))
+def test_solve_residual(A, bseed):
+    As = symbolic_fillin_gp(A)
+    plan = build_plan(As)
+    vals = factorize_numpy(As, As.filled_csc(A).data)
+    b = np.random.default_rng(bseed).normal(size=A.n)
+    x = trisolve_numpy(plan, vals, b)
+    r = np.abs(A.to_scipy() @ x - b).max()
+    assert r < 1e-6 * max(1.0, np.abs(b).max())
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_circuit_matrix())
+def test_etree_fill_superset(A):
+    gp = symbolic_fillin_gp(A)
+    et = symbolic_fillin_etree(A)
+    gp_set = set(zip(gp.indices.tolist(),
+                     np.repeat(np.arange(gp.n), np.diff(gp.indptr)).tolist()))
+    et_set = set(zip(et.indices.tolist(),
+                     np.repeat(np.arange(et.n), np.diff(et.indptr)).tolist()))
+    assert gp_set <= et_set
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=64))
+def test_int8_quantization_error_bound(xs):
+    x = jnp.asarray(np.asarray(xs, dtype=np.float32))
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x)).max()
+    assert err <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 60), st.integers(0, 100))
+def test_csc_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    m = max(1, n // 2)
+    rows = rng.integers(0, n, m)
+    cols = rng.integers(0, n, m)
+    vals = rng.normal(size=m)
+    A = csc_from_coo(n, rows, cols, vals)
+    dense = np.zeros((n, n))
+    np.add.at(dense, (rows, cols), vals)
+    np.testing.assert_allclose(A.to_scipy().toarray(), dense, atol=1e-12)

@@ -1,0 +1,66 @@
+"""Roofline: HLO collective parser + term arithmetic + a real tiny dry-run
+cell in a subprocess (proves the dryrun harness end-to-end)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.roofline import Roofline, collective_bytes_from_hlo
+
+SAMPLE_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = bf16[32,128]{1,0} all-gather(%p0), dimensions={0}
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%p0, %p0)
+  %rs = f32[4,128]{1,0} reduce-scatter(%ar), dimensions={0}
+  %cp = s8[1024]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %dot = f32[16,16]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes_from_hlo(SAMPLE_HLO)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 32 * 128 * 2
+    assert out["all-to-all"] == 2 * 8 * 8 * 4
+    assert out["reduce-scatter"] == 4 * 128 * 4
+    assert out["collective-permute"] == 1024
+    counts = out["_counts"]
+    assert counts["all-reduce"] == 1
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                 hlo_flops=197e12, hlo_bytes=819e9, collective_bytes=0.0,
+                 collective_detail={}, model_flops=197e12 * 256).finalize()
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.dominant in ("compute", "memory")
+    assert abs(r.useful_fraction - 1.0) < 1e-9
+
+
+def test_dryrun_cell_subprocess(tmp_path):
+    """Run one real dry-run cell (whisper, smallest arch) on 512 fake devices."""
+    code = (
+        "import sys; sys.path.insert(0, 'src');"
+        "from pathlib import Path;"
+        "from repro.launch.dryrun import run_cell;"
+        f"rec = run_cell('whisper-base', 'decode_32k', False, Path(r'{tmp_path}'));"
+        "assert rec['ok'], rec.get('error');"
+        "print('CELL_OK', rec['roofline']['dominant'])"
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=Path(__file__).resolve().parents[1],
+                       timeout=560)
+    assert "CELL_OK" in r.stdout, r.stdout[-2000:] + "\n" + r.stderr[-3000:]
+    files = list(Path(tmp_path).glob("*.json"))
+    assert files
+    rec = json.loads(files[0].read_text())
+    roof = rec["roofline"]
+    assert roof["compute_s"] > 0 and roof["memory_s"] > 0
+    assert rec["memory"]["temp_bytes_per_device"] < 16e9  # fits v5e HBM

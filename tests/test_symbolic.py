@@ -1,0 +1,48 @@
+"""Symbolic fill-in vs the scipy no-pivot splu oracle."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from repro.core import symbolic_fillin, symbolic_fillin_etree, symbolic_fillin_gp
+from repro.sparse import circuit_jacobian, grid_laplacian, rc_ladder
+
+
+def _pattern_matrix(As):
+    return sp.csc_matrix(
+        (np.ones(As.nnz), As.indices, As.indptr), shape=(As.n, As.n))
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (circuit_jacobian, dict(n=120, avg_degree=4.0, seed=1)),
+    (circuit_jacobian, dict(n=200, avg_degree=5.0, seed=2, asym=0.5)),
+    (grid_laplacian, dict(nx=10, ny=10)),
+    (rc_ladder, dict(n=64)),
+])
+def test_gp_fill_matches_scipy(gen, kw):
+    A = gen(**kw)
+    As = symbolic_fillin_gp(A)
+    lu = spla.splu(A.to_scipy().tocsc(), permc_spec="NATURAL", diag_pivot_thresh=0.0)
+    oracle = ((abs(lu.L) + abs(lu.U)) != 0).astype(np.int8)
+    ours = (_pattern_matrix(As) != 0).astype(np.int8)
+    missing = (oracle - ours) > 0
+    assert missing.nnz == 0, "fill pattern must contain the oracle pattern"
+
+
+def test_etree_is_superset_of_gp():
+    A = circuit_jacobian(180, avg_degree=4.5, seed=3)
+    gp = _pattern_matrix(symbolic_fillin_gp(A))
+    et = _pattern_matrix(symbolic_fillin_etree(A))
+    assert ((gp != 0).astype(int) - (et != 0).astype(int) > 0).nnz == 0
+
+
+def test_scatter_map_roundtrip():
+    A = circuit_jacobian(90, avg_degree=4.0, seed=4)
+    As = symbolic_fillin(A, "gp")
+    filled = As.filled_csc(A)
+    assert np.allclose(abs(filled.to_scipy() - A.to_scipy()).max(), 0.0)
+
+
+def test_dispatch_auto():
+    A = circuit_jacobian(60, seed=5)
+    assert symbolic_fillin(A, "auto").method == "gp"
