@@ -1,0 +1,78 @@
+"""Batched refactorization throughput: one plan, B matrices per dispatch.
+
+Measures per-matrix (re)factorization+solve time as the batch size grows.
+The level-group dispatch count is independent of B — each group runs once
+for the whole batch — so per-matrix cost falls roughly as the dispatch
+overhead amortizes (the CKTSO-style many-matrix workload: Monte-Carlo and
+parameter sweeps over one circuit pattern).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import row, timeit
+
+BATCH_SIZES = [1, 2, 4, 8]
+
+
+def main():
+    import jax.numpy as jnp
+
+    from repro.core import (
+        JaxFactorizer,
+        JaxTriangularSolver,
+        build_plan,
+        fill_reducing_ordering,
+        symbolic_fillin,
+        zero_free_diagonal,
+    )
+    from repro.sparse import circuit_jacobian
+
+    A = circuit_jacobian(600, avg_degree=4.5, seed=5)
+    rp = zero_free_diagonal(A)
+    A = A.permute(rp, np.arange(A.n, dtype=np.int64))
+    perm = fill_reducing_ordering(A, "auto")
+    A = A.permute(perm, perm)
+    As = symbolic_fillin(A, "auto")
+    plan = build_plan(As)
+    fx = JaxFactorizer(plan, dtype=jnp.float64, fuse_levels=True)
+    ts = JaxTriangularSolver(plan)
+
+    rng = np.random.default_rng(0)
+    bmax = max(BATCH_SIZES)
+    vals_all = np.asarray(A.data)[None] * (
+        1.0 + 0.1 * rng.uniform(-1, 1, size=(bmax, A.nnz)))
+    rhs_all = rng.normal(size=(bmax, A.n))
+
+    print(f"# batched_refactorization: n={A.n} nnz_filled={plan.nnz} "
+          f"levels={plan.num_levels}")
+    print("# batch,us_per_matrix_factorize,us_per_matrix_fact_solve,"
+          "throughput_matrices_per_s,speedup_vs_b1")
+    per_matrix_b1 = None
+    results = []
+    for b in BATCH_SIZES:
+        batch = vals_all[:b]
+        rhs = rhs_all[:b]
+        t_fact, _ = timeit(
+            lambda: fx.factorize_batched(batch).block_until_ready())
+        t_both, _ = timeit(
+            lambda: ts.solve_batched(fx.factorize_batched(batch),
+                                     rhs).block_until_ready())
+        per_matrix = t_fact / b
+        if per_matrix_b1 is None:
+            per_matrix_b1 = per_matrix
+        speedup = per_matrix_b1 / per_matrix
+        print(f"{b},{per_matrix * 1e6:.1f},{t_both / b * 1e6:.1f},"
+              f"{1.0 / per_matrix:.1f},{speedup:.2f}", flush=True)
+        row(f"batched_factorize_b{b}", per_matrix * 1e6,
+            f"throughput={1.0 / per_matrix:.1f}/s speedup_vs_b1={speedup:.2f}x")
+        results.append({"batch": b, "per_matrix_s": per_matrix,
+                        "speedup_vs_b1": speedup})
+    b8 = results[-1]
+    print(f"# per-matrix throughput at B={b8['batch']}: "
+          f"{b8['speedup_vs_b1']:.2f}x the B=1 baseline")
+    return results
+
+
+if __name__ == "__main__":
+    main()

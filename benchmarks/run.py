@@ -8,6 +8,7 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 def main() -> None:
     from . import (
+        bench_batched,
         bench_factorization,
         bench_level_stats,
         bench_levelization,
@@ -29,6 +30,8 @@ def main() -> None:
     bench_level_stats.main()
     print("# === End-to-end transient (SPICE loop) ===")
     bench_transient.main()
+    print("# === Batched refactorization throughput (one plan, B matrices) ===")
+    bench_batched.main()
 
 
 if __name__ == "__main__":

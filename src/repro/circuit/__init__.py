@@ -1,4 +1,18 @@
 from .mna import Circuit, rc_grid_circuit
-from .simulate import TransientResult, transient
+from .simulate import (
+    TransientResult,
+    TransientSweepResult,
+    perturbed_copies,
+    transient,
+    transient_sweep,
+)
 
-__all__ = ["Circuit", "rc_grid_circuit", "TransientResult", "transient"]
+__all__ = [
+    "Circuit",
+    "rc_grid_circuit",
+    "TransientResult",
+    "TransientSweepResult",
+    "perturbed_copies",
+    "transient",
+    "transient_sweep",
+]

@@ -17,7 +17,8 @@ import numpy as np
 from ..core.api import GLU
 from .mna import Circuit
 
-__all__ = ["TransientResult", "transient"]
+__all__ = ["TransientResult", "TransientSweepResult", "transient",
+           "transient_sweep", "perturbed_copies"]
 
 
 @dataclasses.dataclass
@@ -92,6 +93,118 @@ def transient(
         voltages=volts,
         newton_iters=iters,
         n_factorizations=n_fact,
+        setup_seconds=setup_s,
+        solve_seconds=solve_s,
+        max_residual=max_res,
+    )
+
+
+@dataclasses.dataclass
+class TransientSweepResult:
+    scales: np.ndarray          # (B,) parameter perturbation factors
+    times: np.ndarray           # (T,)
+    voltages: np.ndarray        # (B, T, n)
+    newton_iters: np.ndarray    # (T,) lockstep iterations per time step
+    n_batched_factorizations: int
+    setup_seconds: float
+    solve_seconds: float
+    max_residual: float         # worst over sweep copies and time steps
+
+
+def perturbed_copies(ckt: Circuit, scales) -> list:
+    """One circuit per scale factor: all conductances and capacitances
+    multiplied by ``s`` (a global process-corner perturbation).  Topology is
+    unchanged, so every copy shares the same sparsity pattern — and hence
+    one GLU symbolic plan."""
+    out = []
+    for s in np.asarray(scales, dtype=np.float64):
+        c = Circuit(ckt.n_nodes)
+        c.resistors = [(a, b, g * s) for a, b, g in ckt.resistors]
+        c.capacitors = [(a, b, cap * s) for a, b, cap in ckt.capacitors]
+        c.isources = list(ckt.isources)
+        c.diodes = list(ckt.diodes)
+        out.append(c)
+    return out
+
+
+def transient_sweep(
+    ckt: Circuit,
+    t_end: float,
+    dt: float,
+    scales,
+    newton_tol: float = 1e-9,
+    max_newton: int = 25,
+    ordering: str = "auto",
+    dtype=None,
+    use_pallas: bool = False,
+) -> TransientSweepResult:
+    """Run B parameter-perturbed copies of ``ckt`` through backward-Euler +
+    Newton in lockstep on ONE symbolic plan (the Monte-Carlo / corner-sweep
+    workload: same pattern, many value vectors per Newton iterate).
+
+    Each iterate assembles all B Jacobians on the host, then a single
+    fused ``GLU.refactorize_solve`` factorizes and solves the whole batch
+    on device.  The step's Newton loop ends when every copy converges.
+    """
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.float64
+    scales = np.atleast_1d(np.asarray(scales, dtype=np.float64))
+    ckts = perturbed_copies(ckt, scales)
+    B = len(ckts)
+    pat = ckts[0].pattern()
+    n = ckt.n
+
+    t0 = time.perf_counter()
+    v0 = np.zeros(n)
+    vals0, _ = ckts[0].assemble(v0, v0, dt, 0.0)
+    from ..sparse.csc import CSC
+
+    glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0),
+              ordering=ordering, dtype=dtype, use_pallas=use_pallas)
+    setup_s = time.perf_counter() - t0
+
+    steps = int(round(t_end / dt))
+    times = np.arange(1, steps + 1) * dt
+    volts = np.zeros((B, steps, n))
+    iters = np.zeros(steps, dtype=np.int64)
+    n_fact = 0
+    max_res = 0.0
+
+    def assemble_all(v_it, v_prev, t):
+        vals = np.empty((B, pat.nnz))
+        rhs = np.empty((B, n))
+        for k, c in enumerate(ckts):
+            vals[k], rhs[k] = c.assemble(v_it[k], v_prev[k], dt, t)
+        return vals, rhs
+
+    t0 = time.perf_counter()
+    v_prev = np.zeros((B, n))
+    for s, t in enumerate(times):
+        v_it = v_prev.copy()
+        for it in range(max_newton):
+            vals, rhs = assemble_all(v_it, v_prev, float(t))
+            v_new = glu.refactorize_solve(vals, rhs)
+            n_fact += 1
+            dv = np.abs(v_new - v_it).max()
+            v_it = v_new
+            if dv < newton_tol:
+                break
+        iters[s] = it + 1
+        vals, rhs = assemble_all(v_it, v_prev, float(t))
+        for k in range(B):
+            r = np.abs(A_mul(pat, vals[k], v_it[k]) - rhs[k]).max()
+            max_res = max(max_res, float(r))
+        volts[:, s] = v_it
+        v_prev = v_it
+    solve_s = time.perf_counter() - t0
+
+    return TransientSweepResult(
+        scales=scales,
+        times=times,
+        voltages=volts,
+        newton_iters=iters,
+        n_batched_factorizations=n_fact,
         setup_seconds=setup_s,
         solve_seconds=solve_s,
         max_residual=max_res,

@@ -71,6 +71,7 @@ class GLU:
         )
         self._solver = JaxTriangularSolver(self.plan)
         self._vals: Optional[jnp.ndarray] = None
+        self._vals_batch: Optional[jnp.ndarray] = None
         self.dtype = dtype
 
     # -- numeric phase (repeatable) -----------------------------------------
@@ -96,6 +97,52 @@ class GLU:
         bp = np.asarray(b, dtype=np.float64)[self._inv_row]
         xp = np.asarray(self._solver.solve(self._vals, bp))
         return xp[self.col_map]
+
+    # -- batched numeric phase (one plan, many matrices) ----------------------
+    def factorize_batched(self, a_data_batch) -> "GLU":
+        """Factorize B matrices on this pattern in lockstep.
+
+        ``a_data_batch``: (B, nnz) values, one matrix per row, each in A's
+        original CSC entry order (the Monte-Carlo / parameter-sweep
+        refactorization contract: one symbolic plan, many value vectors).
+        """
+        data = np.asarray(a_data_batch)
+        if data.ndim != 2:
+            raise ValueError(f"expected (B, nnz) values, got shape {data.shape}")
+        self._vals_batch = self._factorizer.factorize_batched(
+            data[:, self._data_perm])
+        return self
+
+    def factorized_values_batched(self) -> jnp.ndarray:
+        if self._vals_batch is None:
+            raise RuntimeError("call factorize_batched() first")
+        return self._vals_batch
+
+    def solve_batched(self, b_batch) -> np.ndarray:
+        """Solve A_i x_i = b_i for every matrix of the current batched
+        factorization; ``b_batch`` is (B, n), returns (B, n)."""
+        if self._vals_batch is None:
+            raise RuntimeError("call factorize_batched() first")
+        bp = np.asarray(b_batch, dtype=np.float64)[:, self._inv_row]
+        xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp))
+        return xp[:, self.col_map]
+
+    def refactorize_solve(self, a_data_batch, b_batch) -> np.ndarray:
+        """Fused batched refactorize + solve in one call (the Newton inner
+        step of a parameter sweep).  Accepts (B, nnz)+(B, n) or a single
+        (nnz,)+(n,) pair; the factored values stay on device between the
+        two phases and are kept for later ``solve_batched`` calls."""
+        data = np.asarray(a_data_batch)
+        b = np.asarray(b_batch)
+        single = data.ndim == 1
+        if single:
+            data, b = data[None], b[None]
+        self.factorize_batched(data)
+        x = self.solve_batched(b)
+        if single:
+            self._vals = self._vals_batch[0]
+            return x[0]
+        return x
 
     # -- diagnostics ----------------------------------------------------------
     @property

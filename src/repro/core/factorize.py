@@ -142,8 +142,7 @@ def _pow2(x: int, lo: int = 8) -> int:
     return max(lo, 1 << (int(x - 1).bit_length())) if x > 0 else lo
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _level_step(vals, norm_idx, norm_diag, lidx, uidx, didx):
+def _level_step_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
     lv = vals.at[norm_idx].get(mode="fill", fill_value=0.0)
     dv = vals.at[norm_diag].get(mode="fill", fill_value=1.0)
     vals = vals.at[norm_idx].set(lv / dv, mode="drop")
@@ -152,21 +151,27 @@ def _level_step(vals, norm_idx, norm_diag, lidx, uidx, didx):
     return vals.at[didx].add(-l * u, mode="drop")
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _scan_steps(vals, norm_idx, norm_diag, lidx, uidx, didx):
+def _scan_steps_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
     """Run a stack of same-shape levels sequentially inside one dispatch."""
 
     def body(v, xs):
-        ni, nd, li, ui, di = xs
-        lv = v.at[ni].get(mode="fill", fill_value=0.0)
-        dv = v.at[nd].get(mode="fill", fill_value=1.0)
-        v = v.at[ni].set(lv / dv, mode="drop")
-        l = v.at[li].get(mode="fill", fill_value=0.0)
-        u = v.at[ui].get(mode="fill", fill_value=0.0)
-        return v.at[di].add(-l * u, mode="drop"), None
+        return _level_step_body(v, *xs), None
 
     vals, _ = jax.lax.scan(body, vals, (norm_idx, norm_diag, lidx, uidx, didx))
     return vals
+
+
+_level_step = partial(jax.jit, donate_argnums=(0,))(_level_step_body)
+_scan_steps = partial(jax.jit, donate_argnums=(0,))(_scan_steps_body)
+
+# Batched twins: vals carries a leading batch axis (B, nnz); the per-level
+# index arrays are shared across the batch, so each group is still ONE
+# device dispatch for the whole batch.
+_IN_AXES = (0, None, None, None, None, None)
+_level_step_batched = partial(jax.jit, donate_argnums=(0,))(
+    jax.vmap(_level_step_body, in_axes=_IN_AXES))
+_scan_steps_batched = partial(jax.jit, donate_argnums=(0,))(
+    jax.vmap(_scan_steps_body, in_axes=_IN_AXES))
 
 
 def _round_up(x: int, m: int) -> int:
@@ -274,6 +279,19 @@ def _dense_tail_step(vals, pos, eye, *, interpret=True, use_pallas=False):
 
         dense = dense_lu_ref(dense)
     return vals.at[pos].set(dense, mode="drop")
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _dense_tail_step_batched(vals, pos, eye):
+    """Batched trailing block: gather (B, Np, Np), vmapped blocked LU,
+    scatter back.  Always uses the XLA reference LU — the Pallas dense
+    kernel stays a per-matrix dispatch on the unbatched path."""
+    from ..kernels.ref import dense_lu_ref
+
+    dense = vals.at[:, pos].get(mode="fill", fill_value=0.0)
+    dense = dense + eye.astype(vals.dtype)[None]
+    dense = jax.vmap(dense_lu_ref)(dense)
+    return vals.at[:, pos].set(dense, mode="drop")
 
 
 @dataclasses.dataclass
@@ -408,6 +426,37 @@ class JaxFactorizer:
                                         use_pallas=self.use_pallas)
             else:
                 vals = _level_step(vals, *(a[0] for a in g.arrays))
+        return vals
+
+    # -- batched refactorization (one plan, many matrices) -------------------
+    def factorize_batched(self, a_vals_batch) -> jnp.ndarray:
+        """Factorize B matrices sharing this plan's pattern in lockstep.
+
+        ``a_vals_batch``: (B, nnz_A) values, one row per matrix, in A's
+        entry order.  Returns (B, nnz_filled) factored values — row ``i``
+        equals ``factorize(a_vals_batch[i])``.  Every level-group runs as a
+        single device dispatch for the whole batch.
+        """
+        a = jnp.asarray(a_vals_batch, dtype=self.dtype)
+        if a.ndim != 2:
+            raise ValueError(f"expected (B, nnz_A) values, got shape {a.shape}")
+        vals = jnp.zeros((a.shape[0], self.nnz), dtype=self.dtype)
+        vals = vals.at[:, self._a_scatter].set(a)
+        return self.factorize_filled_batched(vals)
+
+    def factorize_filled_batched(self, vals: jnp.ndarray) -> jnp.ndarray:
+        from ..kernels import ops as kops
+
+        for g in self._groups:
+            if g.kind == "scan":
+                vals = _scan_steps_batched(vals, *g.arrays)
+            elif g.kind == "pallas":
+                vals = kops.level_update_batched(vals, *g.arrays,
+                                                 interpret=self.interpret)
+            elif g.kind == "dense":
+                vals = _dense_tail_step_batched(vals, *g.arrays)
+            else:
+                vals = _level_step_batched(vals, *(a[0] for a in g.arrays))
         return vals
 
     __call__ = factorize

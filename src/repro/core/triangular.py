@@ -48,8 +48,7 @@ def _pow2(x: int, lo: int = 8) -> int:
     return max(lo, 1 << (int(x - 1).bit_length())) if x > 0 else lo
 
 
-@partial(jax.jit, donate_argnums=(1,))
-def _fwd_group(vals, b, rows, cols, vidx):
+def _fwd_group_body(vals, b, rows, cols, vidx):
     def body(bb, xs):
         r, c, v = xs
         lv = vals.at[v].get(mode="fill", fill_value=0.0)
@@ -60,8 +59,7 @@ def _fwd_group(vals, b, rows, cols, vidx):
     return b
 
 
-@partial(jax.jit, donate_argnums=(1,))
-def _bwd_group(vals, b, lcols, ldiag, rows, cols, vidx):
+def _bwd_group_body(vals, b, lcols, ldiag, rows, cols, vidx):
     def body(bb, xs):
         lc, ld, r, c, v = xs
         dv = vals.at[ld].get(mode="fill", fill_value=1.0)
@@ -73,6 +71,17 @@ def _bwd_group(vals, b, lcols, ldiag, rows, cols, vidx):
 
     b, _ = jax.lax.scan(body, b, (lcols, ldiag, rows, cols, vidx))
     return b
+
+
+_fwd_group = partial(jax.jit, donate_argnums=(1,))(_fwd_group_body)
+_bwd_group = partial(jax.jit, donate_argnums=(1,))(_bwd_group_body)
+
+# Batched twins: vals (B, nnz) and b (B, n) share the level-group index
+# arrays, so each group stays ONE dispatch for the whole batch.
+_fwd_group_batched = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_fwd_group_body, in_axes=(0, 0, None, None, None)))
+_bwd_group_batched = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_bwd_group_body, in_axes=(0, 0, None, None, None, None, None)))
 
 
 class JaxTriangularSolver:
@@ -147,4 +156,19 @@ class JaxTriangularSolver:
             x = _fwd_group(vals, x, *g)
         for g in self._bwd_groups:
             x = _bwd_group(vals, x, *g)
+        return x
+
+    def solve_batched(self, vals_batch: jnp.ndarray, b_batch) -> jnp.ndarray:
+        """Row i of the result solves with factor values ``vals_batch[i]``
+        and right-hand side ``b_batch[i]`` — B solves in lockstep."""
+        vals = jnp.asarray(vals_batch)
+        x = jnp.asarray(b_batch, dtype=vals.dtype)
+        if vals.ndim != 2 or x.ndim != 2 or vals.shape[0] != x.shape[0]:
+            raise ValueError(
+                f"expected (B, nnz) values and (B, n) rhs, got "
+                f"{vals.shape} and {x.shape}")
+        for g in self._fwd_groups:
+            x = _fwd_group_batched(vals, x, *g)
+        for g in self._bwd_groups:
+            x = _bwd_group_batched(vals, x, *g)
         return x

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from .dense_lu import dense_lu
 from .level_update import segmented_accumulate
 
-__all__ = ["level_update", "dense_lu", "spmv"]
+__all__ = ["level_update", "level_update_batched", "dense_lu", "spmv"]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
@@ -51,6 +51,43 @@ def level_update(
     col_vals = vals.at[col_positions].get(mode="fill", fill_value=0.0)
     out = segmented_accumulate(col_vals, contribs, didx_local, interpret=interpret)
     return vals.at[col_positions].set(out, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def level_update_batched(
+    vals,
+    norm_idx,
+    norm_diag,
+    lidx2d,
+    uidx2d,
+    didx_local,
+    col_positions,
+    *,
+    interpret: bool = True,
+):
+    """One GLU level for a whole batch of matrices sharing the plan.
+
+    ``vals`` is (B, nnz); the layout arrays are the same as
+    :func:`level_update` and shared across the batch.  The batch axis folds
+    into the kernel's destination-column grid axis — contributions become
+    (B*D, R) and segments (B*D, C) — so the whole batch is ONE kernel
+    launch with grid (B*D, C//CB), not B launches.
+    """
+    B = vals.shape[0]
+    D, R = lidx2d.shape
+    C = col_positions.shape[1]
+    lv = vals.at[:, norm_idx].get(mode="fill", fill_value=0.0)
+    dv = vals.at[:, norm_diag].get(mode="fill", fill_value=1.0)
+    vals = vals.at[:, norm_idx].set(lv / dv, mode="drop")
+
+    l = vals.at[:, lidx2d].get(mode="fill", fill_value=0.0)       # (B, D, R)
+    u = vals.at[:, uidx2d].get(mode="fill", fill_value=0.0)
+    contribs = (-(l * u)).reshape(B * D, R)
+    col_vals = vals.at[:, col_positions].get(mode="fill", fill_value=0.0)
+    dl = jnp.broadcast_to(didx_local, (B, D, R)).reshape(B * D, R)
+    out = segmented_accumulate(col_vals.reshape(B * D, C), contribs, dl,
+                               interpret=interpret)
+    return vals.at[:, col_positions].set(out.reshape(B, D, C), mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows",))

@@ -2,7 +2,8 @@
 
 Layout:  <dir>/step_<N>/
            manifest.json     — leaf paths, shapes, dtypes, content hashes
-           shard_<host>.msgpack.zst — this host's leaf bytes
+           shard_<host>.msgpack — this host's leaf bytes (per-leaf
+                               compressed; codec recorded in the manifest)
 
 Guarantees:
   * atomic commit: written to ``step_<N>.tmp`` then renamed;
@@ -22,13 +23,39 @@ import threading
 from pathlib import Path
 from typing import Any, Optional
 
+import zlib
+
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: falls back to stdlib zlib when zstandard is not installed
+    import zstandard
+except ImportError:
+    zstandard = None
 
 import jax
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "Checkpointer"]
+
+
+def _make_compressor():
+    """(codec_name, compress_fn) — zstd when available, else stdlib zlib."""
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3)
+        return "zstd", comp.compress
+    return "zlib", lambda raw: zlib.compress(raw, 6)
+
+
+def _make_decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd compression but the "
+                "'zstandard' package is not installed; pip install zstandard")
+        return zstandard.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise IOError(f"unknown checkpoint compression codec {codec!r}")
 
 
 def _flatten(tree):
@@ -51,8 +78,8 @@ def save_checkpoint(directory, step: int, tree, *, host_id: int = 0, keep: int =
         tmp = directory / f"step_{step}.tmp"
         final = directory / f"step_{step}"
         tmp.mkdir(parents=True, exist_ok=True)
-        comp = zstandard.ZstdCompressor(level=3)
-        manifest = {"step": step, "leaves": {}}
+        codec, compress = _make_compressor()
+        manifest = {"step": step, "codec": codec, "leaves": {}}
         payload = {}
         for key, arr in arrays.items():
             raw = arr.tobytes()
@@ -61,8 +88,9 @@ def save_checkpoint(directory, step: int, tree, *, host_id: int = 0, keep: int =
                 "dtype": str(arr.dtype),
                 "hash": hashlib.blake2b(raw, digest_size=16).hexdigest(),
             }
-            payload[key] = comp.compress(raw)
-        with open(tmp / f"shard_{host_id}.msgpack.zst", "wb") as f:
+            payload[key] = compress(raw)
+        # codec-neutral name; the codec lives in the manifest
+        with open(tmp / f"shard_{host_id}.msgpack", "wb") as f:
             f.write(msgpack.packb(payload, use_bin_type=True))
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
@@ -109,9 +137,12 @@ def restore_checkpoint(directory, step: int, like, *, host_id: int = 0,
     path = Path(directory) / f"step_{step}"
     with open(path / "manifest.json") as f:
         manifest = json.load(f)
-    with open(path / f"shard_{host_id}.msgpack.zst", "rb") as f:
+    shard = path / f"shard_{host_id}.msgpack"
+    if not shard.exists():  # pre-codec checkpoints used a .zst suffix
+        shard = path / f"shard_{host_id}.msgpack.zst"
+    with open(shard, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
-    decomp = zstandard.ZstdDecompressor()
+    decompress = _make_decompressor(manifest.get("codec", "zstd"))
 
     flat_like, treedef = _flatten(like)
     flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
@@ -119,7 +150,7 @@ def restore_checkpoint(directory, step: int, like, *, host_id: int = 0,
     for key, spec in manifest["leaves"].items():
         if key not in flat_like:
             continue
-        raw = decomp.decompress(payload[key])
+        raw = decompress(payload[key])
         if hashlib.blake2b(raw, digest_size=16).hexdigest() != spec["hash"]:
             raise IOError(f"checkpoint corruption at leaf {key}")
         arr = np.frombuffer(raw, dtype=spec["dtype"]).reshape(spec["shape"]).copy()

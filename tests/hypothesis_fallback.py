@@ -1,0 +1,73 @@
+"""Minimal stand-in for the hypothesis API used by test_property.py.
+
+When the real ``hypothesis`` package is available it should be preferred
+(test_property imports this module only on ImportError).  The fallback
+draws from a seeded numpy Generator, so the property tests still run —
+deterministically — on environments without hypothesis installed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self.draw_fn = draw_fn
+
+
+def _coerce(s, rng):
+    return s.draw_fn(rng)
+
+
+class _St:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=True):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            k = int(rng.integers(min_size, max_size + 1))
+            return [_coerce(elements, rng) for _ in range(k)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: _coerce(s, rng), *args, **kwargs))
+
+        return build
+
+
+st = _St()
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # property's parameters (it would treat them as fixtures)
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(wrapper, "_max_examples", 10)):
+                drawn = [_coerce(s, rng) for s in strategies]
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.circuit import Circuit, rc_grid_circuit, transient
+from repro.circuit import Circuit, rc_grid_circuit, transient, transient_sweep
 from repro.circuit.simulate import A_mul
 
 
@@ -47,6 +47,33 @@ def test_grid_transient_residuals():
     assert np.isfinite(res.voltages).all()
     # symbolic analysis done once, numeric factorization per Newton iter
     assert res.n_factorizations == res.newton_iters.sum()
+
+
+def test_transient_sweep_matches_unbatched():
+    """Lockstep batched Newton on one plan: the scale=1.0 copy must equal
+    the single-circuit driver, and perturbed corners must differ."""
+    ckt = rc_grid_circuit(4, 4, with_diodes=True, seed=1)
+    ref = transient(ckt, t_end=0.02, dt=0.005)
+    sw = transient_sweep(ckt, t_end=0.02, dt=0.005, scales=[0.9, 1.0, 1.1])
+    assert sw.voltages.shape == (3, len(ref.times), ckt.n)
+    np.testing.assert_allclose(sw.voltages[1], ref.voltages,
+                               rtol=1e-8, atol=1e-10)
+    assert np.abs(sw.voltages[0] - sw.voltages[2]).max() > 1e-5
+    assert sw.max_residual < 1e-6
+    # one batched factorization per lockstep Newton iterate
+    assert sw.n_batched_factorizations == sw.newton_iters.sum()
+
+
+@pytest.mark.slow
+def test_transient_sweep_long():
+    """Longer corner sweep (the Monte-Carlo workload) stays convergent."""
+    ckt = rc_grid_circuit(6, 6, with_diodes=True, seed=4)
+    scales = np.linspace(0.8, 1.2, 8)
+    sw = transient_sweep(ckt, t_end=0.05, dt=0.002, scales=scales)
+    assert np.isfinite(sw.voltages).all()
+    assert sw.max_residual < 1e-6
+    v_final = sw.voltages[:, -1, :]
+    assert (v_final.max(axis=0) - v_final.min(axis=0)).max() > 1e-4
 
 
 def test_assembly_pattern_reuse():

@@ -1,0 +1,105 @@
+"""Executor configuration matrix, oracle-backed.
+
+Sweeps every executor knob combination — ``fuse_levels`` on/off,
+``use_pallas`` on/off (interpret mode), ``dense_tail`` on/off, and each
+``mode_override`` — against the sequential host oracle
+``factorize_numpy`` on generated circuit-like matrices, and asserts by
+name that every ``_Group`` kind (``scan``/``flat``/``pallas``/``dense``)
+is exercised somewhere in the sweep.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    JaxFactorizer,
+    build_plan,
+    factorize_numpy,
+    fill_reducing_ordering,
+    symbolic_fillin_gp,
+)
+from repro.core.plan import MODE_FLAT, MODE_PANEL, MODE_SEGMENTED
+from repro.sparse import circuit_jacobian
+
+OVERRIDES = [None, MODE_FLAT, MODE_SEGMENTED, MODE_PANEL]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = circuit_jacobian(130, avg_degree=4.0, seed=21)
+    As = symbolic_fillin_gp(A)
+    plan = build_plan(As)
+    oracle = factorize_numpy(As, As.filled_csc(A).data)
+    return A, plan, oracle
+
+
+@pytest.fixture(scope="module")
+def dense_problem():
+    """mindeg-ordered larger instance whose trailing block goes dense."""
+    A0 = circuit_jacobian(500, avg_degree=4.0, seed=22)
+    perm = fill_reducing_ordering(A0, "mindeg")
+    A = A0.permute(perm, perm)
+    As = symbolic_fillin_gp(A)
+    plan = build_plan(As)
+    oracle = factorize_numpy(As, As.filled_csc(A).data)
+    return A, plan, oracle
+
+
+@pytest.mark.parametrize("mode_override", OVERRIDES,
+                         ids=[o or "auto" for o in OVERRIDES])
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+@pytest.mark.parametrize("fuse_levels", [False, True], ids=["nofuse", "fuse"])
+def test_mode_matrix_matches_oracle(problem, fuse_levels, use_pallas,
+                                    mode_override):
+    A, plan, oracle = problem
+    fx = JaxFactorizer(
+        plan,
+        dtype=jnp.float64,
+        fuse_levels=fuse_levels,
+        use_pallas=use_pallas,
+        mode_override=mode_override,
+        interpret=True,
+    )
+    if use_pallas and mode_override in (MODE_SEGMENTED, MODE_PANEL):
+        # levels with updates must route through the Pallas kernel
+        assert any(g.kind == "pallas" for g in fx._groups)
+    out = np.asarray(fx.factorize(np.asarray(A.data)))
+    np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+def test_mode_matrix_dense_tail(dense_problem, use_pallas):
+    A, plan, oracle = dense_problem
+    fx = JaxFactorizer(plan, dtype=jnp.float64, dense_tail=True,
+                       use_pallas=use_pallas, interpret=True)
+    if fx.dense_tail_info is None:
+        pytest.skip("no dense tail found for this instance")
+    assert any(g.kind == "dense" for g in fx._groups)
+    out = np.asarray(fx.factorize(np.asarray(A.data)))
+    np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
+
+
+def test_dense_tail_off_has_no_dense_group(dense_problem):
+    _, plan, _ = dense_problem
+    fx = JaxFactorizer(plan, dtype=jnp.float64, dense_tail=False)
+    assert all(g.kind != "dense" for g in fx._groups)
+
+
+def test_every_group_kind_exercised(problem, dense_problem):
+    """The executor configuration space reaches every step kind by name
+    (self-contained: builds its own factorizers, no cross-test state)."""
+    _, plan, _ = problem
+    _, dense_plan, _ = dense_problem
+    kinds = set()
+    kinds.update(g.kind for g in
+                 JaxFactorizer(plan, dtype=jnp.float64, fuse_levels=True)._groups)
+    kinds.update(g.kind for g in
+                 JaxFactorizer(plan, dtype=jnp.float64, fuse_levels=False)._groups)
+    kinds.update(g.kind for g in
+                 JaxFactorizer(plan, dtype=jnp.float64, use_pallas=True)._groups)
+    fx = JaxFactorizer(dense_plan, dtype=jnp.float64, dense_tail=True)
+    if fx.dense_tail_info is None:
+        pytest.skip("no dense tail found for this instance")
+    kinds.update(g.kind for g in fx._groups)
+    assert kinds >= {"scan", "flat", "pallas", "dense"}, kinds

@@ -29,6 +29,7 @@ def _extras(cfg, key, B):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_prefill_decode_match_train(arch, key):
     cfg = get_config(arch).reduced()
@@ -123,6 +124,7 @@ def test_swa_matches_full_when_window_large(key):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_long_decode_swa_rolling_buffer(key):
     """Decode past the window: the rolling buffer must keep only the last
     ``window`` positions and still match a full-attention reference that is

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-rng fallback; same properties, fixed examples
+    from hypothesis_fallback import given, settings, st
 
 import jax.numpy as jnp
 

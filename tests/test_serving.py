@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # LM-serving tests; run with -m slow
+
 import jax
 
 from repro.configs import get_config

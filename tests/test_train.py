@@ -36,6 +36,7 @@ def test_loss_decreases(tiny, key):
     assert losses[-1] < losses[0] - 0.3, losses[::8]
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(tiny, key):
     """Grad accumulation over 4 microbatches == single big batch."""
     cfg = tiny
@@ -57,6 +58,7 @@ def test_microbatch_equivalence(tiny, key):
                                    rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_compress_grads_runs_and_stays_close(tiny, key):
     cfg = tiny
     params = init_params(cfg, key)
