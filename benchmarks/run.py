@@ -13,6 +13,7 @@ def main() -> None:
         bench_level_stats,
         bench_levelization,
         bench_modes,
+        bench_robustness,
         bench_threshold,
         bench_transient,
     )
@@ -32,6 +33,8 @@ def main() -> None:
     bench_transient.main()
     print("# === Batched refactorization throughput (one plan, B matrices) ===")
     bench_batched.main()
+    print("# === Robustness layer: scaling / guard / refinement ===")
+    bench_robustness.main()
 
 
 if __name__ == "__main__":

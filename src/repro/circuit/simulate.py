@@ -30,6 +30,7 @@ class TransientResult:
     setup_seconds: float
     solve_seconds: float
     max_residual: float
+    n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
 
 
 def transient(
@@ -42,7 +43,20 @@ def transient(
     dtype=None,
     use_pallas: bool = False,
     glu: Optional[GLU] = None,
+    refine: Optional[int] = None,
+    static_pivot: Optional[float] = None,
 ) -> TransientResult:
+    """Backward-Euler + Newton transient.  ``refine=None`` (default) leaves
+    a prebuilt ``glu``'s own refinement default in charge; an explicit
+    integer — including 0 — overrides it per solve.  With ``refine > 0``
+    every linear solve runs iterative refinement and the Newton loop consumes
+    ``GLU.solve_info``: a solve whose componentwise backward error misses
+    tolerance triggers a re-scaling rebuild (fresh MC64 matching/scaling on
+    the *current* operating point's Jacobian) and a retry — the operating
+    point can drift far from the values the setup-time scaling saw.  At
+    most one rebuild fires per time step, and only when this driver
+    constructed the GLU itself (a caller-supplied ``glu`` is never swapped
+    out)."""
     import jax.numpy as jnp
 
     dtype = dtype or jnp.float64
@@ -55,8 +69,15 @@ def transient(
     from ..sparse.csc import CSC
 
     A0 = CSC(pat.n, pat.indptr, pat.indices, vals0)
-    if glu is None:
-        glu = GLU(A0, ordering=ordering, dtype=dtype, use_pallas=use_pallas)
+    glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
+                      refine=refine or 0, static_pivot=static_pivot)
+    # re-scaling rebuilds only apply to a GLU this driver constructed: a
+    # caller-prebuilt solver may carry configuration (dense_tail, custom
+    # tolerances, ...) that glu_kwargs cannot reproduce, so it is never
+    # silently swapped out mid-run
+    owns_glu = glu is None
+    if owns_glu:
+        glu = GLU(A0, **glu_kwargs)
     setup_s = time.perf_counter() - t0
 
     steps = int(round(t_end / dt))
@@ -64,17 +85,46 @@ def transient(
     volts = np.zeros((steps, n))
     iters = np.zeros(steps, dtype=np.int64)
     n_fact = 0
+    n_rescale = 0
     max_res = 0.0
 
     t0 = time.perf_counter()
     v_prev = v.copy()
     for s, t in enumerate(times):
         v_it = v_prev.copy()
+        rescaled_this_step = False
         for it in range(max_newton):
             vals, rhs = ckt.assemble(v_it, v_prev, dt, float(t))
             glu.factorize(vals)
             n_fact += 1
-            v_new = glu.solve(rhs)
+            # an explicit refine (including 0) wins over a prebuilt glu's
+            # own default; None defers to it
+            v_new = (glu.solve(rhs) if refine is None
+                     else glu.solve(rhs, refine=refine))
+            if refine and owns_glu and not rescaled_this_step:
+                info = glu.solve_info
+                if info is not None and info.get("converged") is False:
+                    # refinement stalled: the setup-time scaling no longer
+                    # fits this operating point — re-run MC64 on the current
+                    # Jacobian and retry the solve on the fresh plan.  At
+                    # most one rebuild per time step: if the fresh scaling
+                    # doesn't help either, repeating the (expensive) host
+                    # symbolic pipeline every Newton iterate won't — the
+                    # Newton dv test remains the step's arbiter.  A Jacobian
+                    # that is numerically singular at this iterate (a device
+                    # switched fully off) just skips the rebuild: crashing
+                    # a long run would be strictly worse than pre-PR behavior
+                    rescaled_this_step = True
+                    try:
+                        glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals),
+                                  **glu_kwargs)
+                    except ValueError:
+                        pass
+                    else:
+                        n_rescale += 1
+                        glu.factorize(vals)
+                        n_fact += 1
+                        v_new = glu.solve(rhs)
             dv = np.abs(v_new - v_it).max()
             v_it = v_new
             if dv < newton_tol:
@@ -96,6 +146,7 @@ def transient(
         setup_seconds=setup_s,
         solve_seconds=solve_s,
         max_residual=max_res,
+        n_rescalings=n_rescale,
     )
 
 
@@ -109,6 +160,7 @@ class TransientSweepResult:
     setup_seconds: float
     solve_seconds: float
     max_residual: float         # worst over sweep copies and time steps
+    n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
 
 
 def perturbed_copies(ckt: Circuit, scales) -> list:
@@ -137,6 +189,8 @@ def transient_sweep(
     ordering: str = "auto",
     dtype=None,
     use_pallas: bool = False,
+    refine: Optional[int] = None,
+    static_pivot: Optional[float] = None,
 ) -> TransientSweepResult:
     """Run B parameter-perturbed copies of ``ckt`` through backward-Euler +
     Newton in lockstep on ONE symbolic plan (the Monte-Carlo / corner-sweep
@@ -160,8 +214,9 @@ def transient_sweep(
     vals0, _ = ckts[0].assemble(v0, v0, dt, 0.0)
     from ..sparse.csc import CSC
 
-    glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0),
-              ordering=ordering, dtype=dtype, use_pallas=use_pallas)
+    glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
+                      refine=refine or 0, static_pivot=static_pivot)
+    glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0), **glu_kwargs)
     setup_s = time.perf_counter() - t0
 
     steps = int(round(t_end / dt))
@@ -169,6 +224,7 @@ def transient_sweep(
     volts = np.zeros((B, steps, n))
     iters = np.zeros(steps, dtype=np.int64)
     n_fact = 0
+    n_rescale = 0
     max_res = 0.0
 
     def assemble_all(v_it, v_prev, t):
@@ -182,10 +238,31 @@ def transient_sweep(
     v_prev = np.zeros((B, n))
     for s, t in enumerate(times):
         v_it = v_prev.copy()
+        rescaled_this_step = False
         for it in range(max_newton):
             vals, rhs = assemble_all(v_it, v_prev, float(t))
             v_new = glu.refactorize_solve(vals, rhs)
             n_fact += 1
+            if refine and not rescaled_this_step:
+                info = glu.solve_info
+                conv = None if info is None else info.get("converged")
+                if conv is not None and not np.asarray(conv).all():
+                    # re-scale on the worst copy's current Jacobian (one
+                    # shared plan, so one representative picks the scaling);
+                    # at most once per time step, and a numerically singular
+                    # representative skips the rebuild — same rationale as
+                    # ``transient``
+                    worst = int(np.argmax(np.asarray(info["backward_error"])))
+                    rescaled_this_step = True
+                    try:
+                        glu = GLU(CSC(pat.n, pat.indptr, pat.indices,
+                                      vals[worst]), **glu_kwargs)
+                    except ValueError:
+                        pass
+                    else:
+                        n_rescale += 1
+                        v_new = glu.refactorize_solve(vals, rhs)
+                        n_fact += 1
             dv = np.abs(v_new - v_it).max()
             v_it = v_new
             if dv < newton_tol:
@@ -208,6 +285,7 @@ def transient_sweep(
         setup_seconds=setup_s,
         solve_seconds=solve_s,
         max_residual=max_res,
+        n_rescalings=n_rescale,
     )
 
 

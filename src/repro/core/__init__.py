@@ -17,7 +17,13 @@ from .factorize import (
     leftlooking_numpy,
     split_lu,
 )
-from .ordering import fill_reducing_ordering, minimum_degree, rcm, zero_free_diagonal
+from .ordering import (
+    fill_reducing_ordering,
+    max_product_matching,
+    minimum_degree,
+    rcm,
+    zero_free_diagonal,
+)
 from .plan import FactorizePlan, build_plan
 from .symbolic import FilledPattern, symbolic_fillin, symbolic_fillin_etree, symbolic_fillin_gp
 from .triangular import JaxTriangularSolver, trisolve_numpy
@@ -37,6 +43,7 @@ __all__ = [
     "leftlooking_numpy",
     "split_lu",
     "fill_reducing_ordering",
+    "max_product_matching",
     "minimum_degree",
     "rcm",
     "zero_free_diagonal",

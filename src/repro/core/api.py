@@ -1,8 +1,9 @@
 """GLU facade: the paper's full flow (Fig. 5) behind one class.
 
-  A -> MC64-lite (zero-free diagonal) -> fill-reducing ordering ->
-  symbolic fill-in -> relaxed dependency detection + levelization ->
-  plan -> (re)factorize on device -> triangular solve
+  A -> MC64 (max-product matching + Dr/Dc scaling) -> fill-reducing
+  ordering -> symbolic fill-in -> relaxed dependency detection +
+  levelization -> plan -> (re)factorize on device -> triangular solve
+  (+ optional batched iterative refinement)
 
 Construction does all host-side symbolic work once; ``factorize``/``solve``
 are the fast repeated path (SPICE Newton iterations reuse the plan).
@@ -11,6 +12,14 @@ Permutation algebra: with row_map/col_map (old -> new),
 ``A_perm[row_map[i], col_map[j]] = A[i, j]`` and solving ``A x = b`` becomes
 ``A_perm x_perm = b_perm`` with ``b_perm = b[inv_row_map]`` and
 ``x = x_perm[col_map]``.
+
+Scaling algebra: the device actually factorizes ``B = Dr A Dc`` (every
+scaled entry <= 1 in magnitude, matched diagonal exactly 1 — the Duff-Koster
+guarantee no-pivot LU relies on).  ``A x = b`` becomes ``B y = Dr b`` with
+``x = Dc y``; both transforms are diagonal and exact to one rounding each.
+The componentwise backward error max_i |r_i| / (|A||x| + |b|)_i is invariant
+under both row and column scaling, so the refinement stopping test on the
+scaled system is the same test on the original one.
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import jax.numpy as jnp
 from ..sparse.csc import CSC
 from .dependency import levelize_relaxed
 from .factorize import JaxFactorizer
-from .ordering import fill_reducing_ordering, zero_free_diagonal
+from .ordering import fill_reducing_ordering, max_product_matching, zero_free_diagonal
 from .plan import build_plan
 from .symbolic import symbolic_fillin
 from .triangular import JaxTriangularSolver
@@ -38,28 +47,65 @@ class GLU:
         ordering: str = "auto",
         symbolic: str = "auto",
         dtype=jnp.float64,
-        mc64: bool = True,
+        mc64="scale",
         fuse_levels: bool = True,
         use_pallas: bool = False,
         panel_threshold: int = 16,
+        static_pivot: Optional[float] = None,
+        refine: int = 0,
+        refine_tol: Optional[float] = None,
+        dense_tail: bool = False,
+        dense_tail_density: float = 0.25,
+        mode_override: Optional[str] = None,
+        interpret: bool = True,
     ):
+        """``mc64``: ``"scale"``/``True`` — full Duff-Koster max-product
+        matching with Dr/Dc scalings; ``"structural"`` — zero-free diagonal
+        only (no scaling); ``"none"``/``False`` — identity.
+
+        ``static_pivot``: relative threshold eps for the SuperLU_DIST-style
+        pivot guard — any |diag| < eps * max|A| is bumped instead of
+        producing inf/NaN (None disables).
+
+        ``refine``: default number of iterative-refinement steps applied by
+        ``solve``/``solve_batched`` (overridable per call); ``refine_tol``
+        is the componentwise-backward-error stopping test (default 4 ulp of
+        the value dtype).
+        """
         self.n = A.n
         self._A_scipy = A.to_scipy()
-        # --- preprocessing -------------------------------------------------
-        if mc64:
+        rows0, cols0, _ = A.to_coo()
+        # --- preprocessing: MC64 matching + scaling ------------------------
+        if mc64 in (True, "scale"):
+            row_perm, Dr, Dc = max_product_matching(A)
+        elif mc64 == "structural":
             row_perm = zero_free_diagonal(A)
-        else:
+            Dr = Dc = np.ones(A.n)
+        elif mc64 in (False, None, "none"):
             row_perm = np.arange(A.n, dtype=np.int64)
-        A_rp = A.permute(row_perm, np.arange(A.n, dtype=np.int64))
+            Dr = Dc = np.ones(A.n)
+        else:
+            raise ValueError(f"unknown mc64 mode {mc64!r}")
+        self.Dr, self.Dc = Dr, Dc
+        # per-original-entry scale factor: entry (i, j) -> Dr[i] * Dc[j];
+        # identity for the unscaled modes, where the multiply is skipped
+        self._scale_data = Dr[rows0] * Dc[cols0.astype(np.int64)]
+        self._scale_identity = bool(np.all(self._scale_data == 1.0))
+        A_scaled = CSC(A.n, A.indptr, A.indices,
+                       np.asarray(A.data, dtype=np.float64) * self._scale_data)
+        A_rp = A_scaled.permute(row_perm, np.arange(A.n, dtype=np.int64))
         sym_perm = fill_reducing_ordering(A_rp, ordering)
         self.row_map = sym_perm[row_perm]       # old row -> new row
         self.col_map = sym_perm                 # old col -> new col
         self._inv_row = np.argsort(self.row_map)
-        A_perm = A.permute(self.row_map, self.col_map)
+        A_perm = A_scaled.permute(self.row_map, self.col_map)
         self._A_perm = A_perm
         # original-entry-order -> permuted-entry-order map (for refactorize)
-        rows0, cols0, _ = A.to_coo()
         self._data_perm = np.lexsort((self.row_map[rows0], self.col_map[cols0]))
+        # scaled-A SpMV layout (permuted pattern) for iterative refinement
+        rp, cp, _ = A_perm.to_coo()
+        self._spmv_rows = jnp.asarray(rp.astype(np.int32))
+        self._spmv_cols = jnp.asarray(cp.astype(np.int32))
 
         # --- symbolic ------------------------------------------------------
         self.pattern = symbolic_fillin(A_perm, symbolic)
@@ -67,22 +113,45 @@ class GLU:
         self.plan = build_plan(self.pattern, self.levelization,
                                panel_threshold=panel_threshold)
         self._factorizer = JaxFactorizer(
-            self.plan, dtype=dtype, fuse_levels=fuse_levels, use_pallas=use_pallas
+            self.plan, dtype=dtype, fuse_levels=fuse_levels,
+            use_pallas=use_pallas, mode_override=mode_override,
+            interpret=interpret, dense_tail=dense_tail,
+            dense_tail_density=dense_tail_density, static_pivot=static_pivot,
         )
         self._solver = JaxTriangularSolver(self.plan)
         self._vals: Optional[jnp.ndarray] = None
         self._vals_batch: Optional[jnp.ndarray] = None
+        self._a_vals: Optional[jnp.ndarray] = None
+        self._a_abs: Optional[jnp.ndarray] = None
+        self._a_vals_batch: Optional[jnp.ndarray] = None
+        self._a_abs_batch: Optional[jnp.ndarray] = None
         self.dtype = dtype
+        self.refine_default = int(refine)
+        self.refine_tol = (float(refine_tol) if refine_tol is not None
+                           else 4.0 * float(jnp.finfo(dtype).eps))
+        self._info: Optional[dict] = None
+        self._pending_stats = None
 
     # -- numeric phase (repeatable) -----------------------------------------
     def factorize(self, a_data=None) -> "GLU":
         """(Re)factorize; ``a_data`` are new values in A's original CSC entry
-        order (same pattern — the SPICE refactorization contract)."""
+        order (same pattern — the SPICE refactorization contract).  The
+        batched factor cache is invalidated: the two caches can never refer
+        to different matrix values."""
         if a_data is None:
             data = np.asarray(self._A_perm.data)
-        else:
+        elif self._scale_identity:
             data = np.asarray(a_data)[self._data_perm]
-        self._vals = self._factorizer.factorize(data)
+        else:
+            data = (np.asarray(a_data, dtype=np.float64)
+                    * self._scale_data)[self._data_perm]
+        self._a_vals = jnp.asarray(data, dtype=self.dtype)
+        self._a_abs = None                     # lazily built on refined solve
+        self._vals = self._factorizer.factorize(self._a_vals)
+        self._vals_batch = None
+        self._a_vals_batch = None
+        self._a_abs_batch = None
+        self._set_fact_info(self._vals, self._a_vals, batched=False)
         return self
 
     def factorized_values(self) -> jnp.ndarray:
@@ -90,13 +159,31 @@ class GLU:
             raise RuntimeError("call factorize() first")
         return self._vals
 
-    def solve(self, b) -> np.ndarray:
-        """Solve A x = b using the current factorization."""
+    def solve(self, b, refine: Optional[int] = None) -> np.ndarray:
+        """Solve A x = b using the current factorization; ``refine`` extra
+        iterative-refinement sweeps reuse the device factors (default: the
+        constructor's ``refine``)."""
         if self._vals is None:
+            if self._vals_batch is not None:
+                raise RuntimeError(
+                    "the active factorization is batched — use solve_batched(),"
+                    " or call factorize() to refactorize single-matrix first")
             self.factorize()
-        bp = np.asarray(b, dtype=np.float64)[self._inv_row]
-        xp = np.asarray(self._solver.solve(self._vals, bp))
-        return xp[self.col_map]
+        k = self.refine_default if refine is None else int(refine)
+        bp = (np.asarray(b, dtype=np.float64) * self.Dr)[self._inv_row]
+        if k > 0:
+            if self._a_abs is None:
+                self._a_abs = jnp.abs(self._a_vals)
+            xp, rinfo = self._solver.solve_refined(
+                self._vals, bp, self._spmv_rows, self._spmv_cols,
+                self._a_vals, self._a_abs, max_iter=k, tol=self.refine_tol)
+            xp = np.asarray(xp)
+        else:
+            xp = np.asarray(self._solver.solve(self._vals, bp))
+            rinfo = {"refine_iters": 0, "backward_error": None,
+                     "converged": None}
+        self._set_solve_info(rinfo)
+        return xp[self.col_map] * self.Dc
 
     # -- batched numeric phase (one plan, many matrices) ----------------------
     def factorize_batched(self, a_data_batch) -> "GLU":
@@ -105,12 +192,21 @@ class GLU:
         ``a_data_batch``: (B, nnz) values, one matrix per row, each in A's
         original CSC entry order (the Monte-Carlo / parameter-sweep
         refactorization contract: one symbolic plan, many value vectors).
-        """
-        data = np.asarray(a_data_batch)
+        The single-matrix factor cache is invalidated."""
+        data = np.asarray(a_data_batch, dtype=np.float64)
         if data.ndim != 2:
             raise ValueError(f"expected (B, nnz) values, got shape {data.shape}")
-        self._vals_batch = self._factorizer.factorize_batched(
-            data[:, self._data_perm])
+        if self._scale_identity:
+            scaled = data[:, self._data_perm]
+        else:
+            scaled = (data * self._scale_data[None, :])[:, self._data_perm]
+        self._a_vals_batch = jnp.asarray(scaled, dtype=self.dtype)
+        self._a_abs_batch = None               # lazily built on refined solve
+        self._vals_batch = self._factorizer.factorize_batched(self._a_vals_batch)
+        self._vals = None
+        self._a_vals = None
+        self._a_abs = None
+        self._set_fact_info(self._vals_batch, self._a_vals_batch, batched=True)
         return self
 
     def factorized_values_batched(self) -> jnp.ndarray:
@@ -118,16 +214,31 @@ class GLU:
             raise RuntimeError("call factorize_batched() first")
         return self._vals_batch
 
-    def solve_batched(self, b_batch) -> np.ndarray:
+    def solve_batched(self, b_batch, refine: Optional[int] = None) -> np.ndarray:
         """Solve A_i x_i = b_i for every matrix of the current batched
         factorization; ``b_batch`` is (B, n), returns (B, n)."""
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
-        bp = np.asarray(b_batch, dtype=np.float64)[:, self._inv_row]
-        xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp))
-        return xp[:, self.col_map]
+        k = self.refine_default if refine is None else int(refine)
+        bp = (np.asarray(b_batch, dtype=np.float64)
+              * self.Dr[None, :])[:, self._inv_row]
+        if k > 0:
+            if self._a_abs_batch is None:
+                self._a_abs_batch = jnp.abs(self._a_vals_batch)
+            xp, rinfo = self._solver.solve_refined_batched(
+                self._vals_batch, bp, self._spmv_rows, self._spmv_cols,
+                self._a_vals_batch, self._a_abs_batch,
+                max_iter=k, tol=self.refine_tol)
+            xp = np.asarray(xp)
+        else:
+            xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp))
+            rinfo = {"refine_iters": np.zeros(bp.shape[0], dtype=np.int64),
+                     "backward_error": None, "converged": None}
+        self._set_solve_info(rinfo)
+        return xp[:, self.col_map] * self.Dc[None, :]
 
-    def refactorize_solve(self, a_data_batch, b_batch) -> np.ndarray:
+    def refactorize_solve(self, a_data_batch, b_batch,
+                          refine: Optional[int] = None) -> np.ndarray:
         """Fused batched refactorize + solve in one call (the Newton inner
         step of a parameter sweep).  Accepts (B, nnz)+(B, n) or a single
         (nnz,)+(n,) pair; the factored values stay on device between the
@@ -138,13 +249,86 @@ class GLU:
         if single:
             data, b = data[None], b[None]
         self.factorize_batched(data)
-        x = self.solve_batched(b)
+        x = self.solve_batched(b, refine=refine)
         if single:
             self._vals = self._vals_batch[0]
+            self._a_vals = self._a_vals_batch[0]
+            self._a_abs = (None if self._a_abs_batch is None
+                           else self._a_abs_batch[0])
+            # collapse diagnostics to the documented single-matrix contract
+            # (scalars, batched=False), matching the returned x[0]
+            if self._pending_stats is not None:
+                _, _, a_max, n_pert, _ = self._pending_stats
+                self._pending_stats = (
+                    self._vals, self._a_vals,
+                    None if a_max is None else a_max[0],
+                    None if n_pert is None else n_pert[0], False)
+            if self._info is not None:
+                self._info["batched"] = False
+                for key in ("pivot_growth", "min_diag", "n_perturbed",
+                            "refine_iters", "backward_error", "converged"):
+                    v = self._info.get(key)
+                    if v is not None and not isinstance(v, (bool, int, float)):
+                        self._info[key] = np.asarray(v)[0]
             return x[0]
         return x
 
     # -- diagnostics ----------------------------------------------------------
+    def _set_fact_info(self, factored_vals, a_vals, batched: bool) -> None:
+        """Record which factorization the next ``solve_info`` describes.
+        The growth/min-diag reductions (and max|A| when the static-pivot
+        guard didn't already need it) are deferred to first ``solve_info``
+        access so the hot refactorization path pays nothing for them."""
+        self._pending_stats = (factored_vals, a_vals,
+                               self._factorizer.last_a_max,
+                               self._factorizer.last_n_perturbed,
+                               batched)
+        self._info = {
+            "batched": batched,
+            "pivot_growth": None,
+            "min_diag": None,
+            "n_perturbed": None,
+            "refine_iters": None,
+            "backward_error": None,
+            "converged": None,
+        }
+
+    def _set_solve_info(self, rinfo: dict) -> None:
+        if self._info is None:
+            self._info = {"batched": False, "pivot_growth": None,
+                          "min_diag": None, "n_perturbed": None}
+        self._info.update(rinfo)
+
+    @property
+    def solve_info(self) -> Optional[dict]:
+        """Robustness report of the latest factorize/solve: ``pivot_growth``
+        (max|LU|/max|A|), ``min_diag``, ``n_perturbed`` (static-pivot bumps;
+        None when the guard is off), ``refine_iters``, ``backward_error``
+        (componentwise), ``converged``, and ``batched``.  Scalars for the
+        single-matrix path, (B,) arrays for the batched one."""
+        if self._info is None:
+            return None
+        if self._pending_stats is not None:
+            from ..kernels import ops as kops
+
+            vals, a_vals, a_max, n_pert, batched = self._pending_stats
+            if a_max is None:
+                a_abs = jnp.abs(a_vals)
+                a_max = jnp.max(a_abs, axis=1) if batched else jnp.max(a_abs)
+            fn = kops.factor_stats_batched if batched else kops.factor_stats
+            growth, min_diag = fn(vals, self._factorizer._diag_idx, a_max)
+            self._info.update(pivot_growth=growth, min_diag=min_diag,
+                              n_perturbed=n_pert)
+            self._pending_stats = None
+        out = {}
+        for key, v in self._info.items():
+            if v is None or isinstance(v, (bool, int, float)):
+                out[key] = v
+            else:
+                a = np.asarray(v)
+                out[key] = a.item() if a.ndim == 0 else a
+        return out
+
     @property
     def nnz_filled(self) -> int:
         return self.pattern.nnz

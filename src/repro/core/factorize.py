@@ -100,7 +100,7 @@ def leftlooking_numpy(As: FilledPattern, vals: np.ndarray) -> np.ndarray:
         dp = s + int(np.searchsorted(rows, j))
         # triangular solve: for k < j with As(k, j) != 0 ascending
         for p in range(s, dp):
-            k = int(rows[p - s] if False else indices[p])
+            k = int(indices[p])
             akj = vals[p]
             ks, ke = int(indptr[k]), int(indptr[k + 1])
             kdp = ks + int(np.searchsorted(indices[ks:ke], k))
@@ -161,8 +161,33 @@ def _scan_steps_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
     return vals
 
 
+def _level_step_robust_body(vals, lev_diag, tau, norm_idx, norm_diag,
+                            lidx, uidx, didx):
+    """Level step with static pivot perturbation: diagonals of the level's
+    columns are final once all earlier levels ran, so any ``|d| < tau`` is
+    bumped right before the divisions that would otherwise produce
+    inf/NaN (one bump rule for every executor path: _perturb_diags_body)."""
+    from ..kernels.ops import _perturb_diags_body
+
+    vals, n_bumped = _perturb_diags_body(vals, lev_diag, tau)
+    return _level_step_body(vals, norm_idx, norm_diag, lidx, uidx, didx), n_bumped
+
+
+def _scan_steps_robust_body(vals, lev_diag, tau, norm_idx, norm_diag,
+                            lidx, uidx, didx):
+    def body(v, xs):
+        v, c = _level_step_robust_body(v, xs[0], tau, *xs[1:])
+        return v, c
+
+    vals, counts = jax.lax.scan(
+        body, vals, (lev_diag, norm_idx, norm_diag, lidx, uidx, didx))
+    return vals, jnp.sum(counts)
+
+
 _level_step = partial(jax.jit, donate_argnums=(0,))(_level_step_body)
 _scan_steps = partial(jax.jit, donate_argnums=(0,))(_scan_steps_body)
+_level_step_robust = partial(jax.jit, donate_argnums=(0,))(_level_step_robust_body)
+_scan_steps_robust = partial(jax.jit, donate_argnums=(0,))(_scan_steps_robust_body)
 
 # Batched twins: vals carries a leading batch axis (B, nnz); the per-level
 # index arrays are shared across the batch, so each group is still ONE
@@ -172,6 +197,12 @@ _level_step_batched = partial(jax.jit, donate_argnums=(0,))(
     jax.vmap(_level_step_body, in_axes=_IN_AXES))
 _scan_steps_batched = partial(jax.jit, donate_argnums=(0,))(
     jax.vmap(_scan_steps_body, in_axes=_IN_AXES))
+# robust twins additionally map the per-matrix perturbation threshold tau
+_IN_AXES_ROBUST = (0, None, 0, None, None, None, None, None)
+_level_step_robust_batched = partial(jax.jit, donate_argnums=(0,))(
+    jax.vmap(_level_step_robust_body, in_axes=_IN_AXES_ROBUST))
+_scan_steps_robust_batched = partial(jax.jit, donate_argnums=(0,))(
+    jax.vmap(_scan_steps_robust_body, in_axes=_IN_AXES_ROBUST))
 
 
 def _round_up(x: int, m: int) -> int:
@@ -302,6 +333,10 @@ class _Group:
     kind: str      # "scan" | "flat" | "pallas" | "dense"
     arrays: tuple
     mode: str
+    # diag value indices of the columns this step factorizes ((K, Pc) for
+    # scan groups, (Pc,) otherwise; padded with nnz) — the static-pivot
+    # perturbation targets
+    diag: object = None
 
 
 class JaxFactorizer:
@@ -329,6 +364,7 @@ class JaxFactorizer:
         interpret: bool = True,
         dense_tail: bool = False,
         dense_tail_density: float = 0.25,
+        static_pivot: Optional[float] = None,
     ):
         self.plan = plan
         self.dtype = dtype
@@ -336,6 +372,18 @@ class JaxFactorizer:
         self.interpret = interpret
         self._a_scatter = jnp.asarray(plan.a_scatter, dtype=jnp.int32)
         self.nnz = plan.nnz
+        # static pivot perturbation: |diag| < static_pivot * max|A| is bumped
+        # instead of dividing toward inf/NaN (None disables; the fast path
+        # then runs the exact same jitted steps as before).  Granularity is
+        # per level: each level's diagonals are final when its step starts.
+        # The dense trailing block is the one exception — only its
+        # pre-elimination diagonals are guarded; a pivot that turns tiny
+        # *during* the in-tail dense elimination is not re-checked (combine
+        # static_pivot with dense_tail=False if that guarantee matters).
+        self.static_pivot = static_pivot
+        self._diag_idx = jnp.asarray(plan.diag_idx, dtype=jnp.int32)
+        self.last_a_max = None
+        self.last_n_perturbed = None
 
         pad_key = plan.nnz  # padding index == nnz -> drop/fill semantics
         self.dense_tail_info = None
@@ -349,23 +397,36 @@ class JaxFactorizer:
                                             size=plan.n - c_star, padded=Np)
                 self._dense_tail = (pos, eye)
 
+        # Only the static-pivot guard needs per-group diag arrays; gating on
+        # it also keeps the default path's fusion key exactly (pn, pu, mode),
+        # so enabling the guard is the only thing that can change grouping.
+        robust = static_pivot is not None
         groups: list[_Group] = []
         run: list[tuple] = []
+        run_diag: list[np.ndarray] = []
         run_shape = None
         run_mode = MODE_FLAT
 
+        def _seg_diag(seg, pc: int) -> np.ndarray:
+            return _pad_to(plan.diag_idx[seg.cols], pc, pad_key)
+
         def flush():
-            nonlocal run, run_shape
+            nonlocal run, run_diag, run_shape
             if not run:
                 return
             stacked = tuple(
                 jnp.asarray(np.stack([r[i] for r in run])) for i in range(5)
             )
+            diag = None
+            if robust:
+                diag = jnp.asarray(np.stack(run_diag))
+                if len(run) == 1:
+                    diag = diag[0]
             groups.append(
                 _Group(kind="scan" if len(run) > 1 else "flat",
-                       arrays=stacked, mode=run_mode)
+                       arrays=stacked, mode=run_mode, diag=diag)
             )
-            run, run_shape = [], None
+            run, run_diag, run_shape = [], [], None
 
         for seg in plan.segments:
             if seg.level >= level_cut:
@@ -378,12 +439,15 @@ class JaxFactorizer:
                 groups.append(
                     _Group(kind="pallas",
                            arrays=_build_pallas_layout(plan, seg, pad_key),
-                           mode=mode)
+                           mode=mode,
+                           diag=(jnp.asarray(_seg_diag(seg, _pow2(len(seg.cols))))
+                                 if robust else None))
                 )
                 continue
             ns, us = seg.norm_slice, seg.upd_slice
             pn = _pow2(seg.n_norm)
             pu = _pow2(seg.n_upd)
+            pc = _pow2(len(seg.cols))
             arrs = (
                 _pad_to(plan.norm_idx[ns], pn, pad_key),
                 _pad_to(plan.norm_diag[ns], pn, pad_key),
@@ -391,20 +455,28 @@ class JaxFactorizer:
                 _pad_to(plan.uidx[us], pu, pad_key),
                 _pad_to(plan.didx[us], pu, pad_key),
             )
-            shape = (pn, pu, mode)
+            shape = (pn, pu, pc, mode) if robust else (pn, pu, mode)
             if fuse_levels and shape == run_shape:
                 run.append(arrs)
+                if robust:
+                    run_diag.append(_seg_diag(seg, pc))
             else:
                 flush()
                 run = [arrs]
+                run_diag = [_seg_diag(seg, pc)] if robust else []
                 run_shape = shape
                 run_mode = mode
             if not fuse_levels:
                 flush()
         flush()
         if self.dense_tail_info is not None:
+            c_star = self.dense_tail_info["c_star"]
+            tail_diag = None
+            if robust:
+                tail_diag = jnp.asarray(_pad_to(
+                    plan.diag_idx[c_star:], _pow2(plan.n - c_star), pad_key))
             groups.append(_Group(kind="dense", arrays=self._dense_tail,
-                                 mode="dense"))
+                                 mode="dense", diag=tail_diag))
         self._groups = groups
 
     def factorize(self, a_vals) -> jnp.ndarray:
@@ -416,16 +488,45 @@ class JaxFactorizer:
     def factorize_filled(self, vals: jnp.ndarray) -> jnp.ndarray:
         from ..kernels import ops as kops
 
+        robust = self.static_pivot is not None
+        if robust:
+            self.last_a_max = a_max = jnp.max(jnp.abs(vals))
+            tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * a_max
+            counts = []
+        else:
+            # no extra dispatch on the plain hot path; diagnostics that
+            # need max|A| recompute it lazily from the caller's retained
+            # A values (GLU.solve_info does)
+            self.last_a_max = None
+            self.last_n_perturbed = None
         for g in self._groups:
             if g.kind == "scan":
-                vals = _scan_steps(vals, *g.arrays)
+                if robust:
+                    vals, c = _scan_steps_robust(vals, g.diag, tau, *g.arrays)
+                    counts.append(c)
+                else:
+                    vals = _scan_steps(vals, *g.arrays)
             elif g.kind == "pallas":
+                if robust:
+                    vals, c = kops.perturb_diags(vals, g.diag, tau)
+                    counts.append(c)
                 vals = kops.level_update(vals, *g.arrays, interpret=self.interpret)
             elif g.kind == "dense":
+                if robust:
+                    vals, c = kops.perturb_diags(vals, g.diag, tau)
+                    counts.append(c)
                 vals = _dense_tail_step(vals, *g.arrays, interpret=self.interpret,
                                         use_pallas=self.use_pallas)
             else:
-                vals = _level_step(vals, *(a[0] for a in g.arrays))
+                if robust:
+                    vals, c = _level_step_robust(vals, g.diag, tau,
+                                                 *(a[0] for a in g.arrays))
+                    counts.append(c)
+                else:
+                    vals = _level_step(vals, *(a[0] for a in g.arrays))
+        if robust:
+            self.last_n_perturbed = sum(counts) if counts \
+                else jnp.asarray(0, dtype=jnp.int32)
         return vals
 
     # -- batched refactorization (one plan, many matrices) -------------------
@@ -447,16 +548,43 @@ class JaxFactorizer:
     def factorize_filled_batched(self, vals: jnp.ndarray) -> jnp.ndarray:
         from ..kernels import ops as kops
 
+        robust = self.static_pivot is not None
+        if robust:
+            self.last_a_max = jnp.max(jnp.abs(vals), axis=1)  # (B,)
+            tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * self.last_a_max
+            counts = []
+        else:
+            self.last_a_max = None
+            self.last_n_perturbed = None
         for g in self._groups:
             if g.kind == "scan":
-                vals = _scan_steps_batched(vals, *g.arrays)
+                if robust:
+                    vals, c = _scan_steps_robust_batched(vals, g.diag, tau,
+                                                         *g.arrays)
+                    counts.append(c)
+                else:
+                    vals = _scan_steps_batched(vals, *g.arrays)
             elif g.kind == "pallas":
+                if robust:
+                    vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
+                    counts.append(c)
                 vals = kops.level_update_batched(vals, *g.arrays,
                                                  interpret=self.interpret)
             elif g.kind == "dense":
+                if robust:
+                    vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
+                    counts.append(c)
                 vals = _dense_tail_step_batched(vals, *g.arrays)
             else:
-                vals = _level_step_batched(vals, *(a[0] for a in g.arrays))
+                if robust:
+                    vals, c = _level_step_robust_batched(
+                        vals, g.diag, tau, *(a[0] for a in g.arrays))
+                    counts.append(c)
+                else:
+                    vals = _level_step_batched(vals, *(a[0] for a in g.arrays))
+        if robust:
+            self.last_n_perturbed = sum(counts) if counts \
+                else jnp.zeros(vals.shape[0], dtype=jnp.int32)
         return vals
 
     __call__ = factorize

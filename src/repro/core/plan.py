@@ -117,9 +117,15 @@ class FactorizePlan:
 
 
 def _mode_for_level(n_cols: int, n_upd: int, panel_threshold: int) -> str:
+    """Paper Fig. 10 mode criteria: wide levels are type A (flat
+    scatter-add), and the narrow ones split on *update volume*, not column
+    count alone — a narrow level whose few columns carry a huge update load
+    (long fill-heavy columns near the root of the etree) is type B
+    (segmented per-destination accumulation), while a narrow level with
+    genuinely small per-column work is type C (dense panel)."""
     if n_cols > 4 * panel_threshold:
         return MODE_FLAT
-    if n_cols <= panel_threshold:
+    if n_cols <= panel_threshold and n_upd <= 32 * panel_threshold * n_cols:
         return MODE_PANEL
     return MODE_SEGMENTED
 
@@ -149,7 +155,7 @@ def build_plan(
     # --- normalisation arrays grouped by level -----------------------------
     order = lv.order.astype(np.int64)
     norm_idx = _concat_ranges(l_start[order], l_end[order])
-    norm_diag = np.repeat(diag_idx_of := diag_pos[order], nnz_l[order])
+    norm_diag = np.repeat(diag_pos[order], nnz_l[order])
     norm_counts = np.zeros(lv.num_levels, dtype=np.int64)
     np.add.at(norm_counts, levels[order.astype(np.int64)], nnz_l[order])
     norm_ptr = np.concatenate([[0], np.cumsum(norm_counts)])

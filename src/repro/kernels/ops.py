@@ -16,7 +16,16 @@ import jax.numpy as jnp
 from .dense_lu import dense_lu
 from .level_update import segmented_accumulate
 
-__all__ = ["level_update", "level_update_batched", "dense_lu", "spmv"]
+__all__ = [
+    "level_update",
+    "level_update_batched",
+    "dense_lu",
+    "spmv",
+    "perturb_diags",
+    "perturb_diags_batched",
+    "factor_stats",
+    "factor_stats_batched",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
@@ -95,3 +104,41 @@ def spmv(row_ids, colidx, a_vals, x, *, n_rows: int):
     """CSR-ish SpMV: y[row_ids] += a_vals * x[colidx] (segment-sum form)."""
     prods = a_vals * x[colidx]
     return jax.ops.segment_sum(prods, row_ids, num_segments=n_rows)
+
+
+# --------------------------------------------------------------------------
+# Numerical-robustness primitives (diagnostics + static pivoting)
+# --------------------------------------------------------------------------
+
+def _perturb_diags_body(vals, diag_idx, tau):
+    """Static pivot perturbation (SuperLU_DIST-style): any diagonal with
+    ``|d| < tau`` is replaced by ``sign(d) * tau`` (zeros bump positive)
+    instead of poisoning the factors with inf/NaN.  ``diag_idx`` is padded
+    with ``nnz`` (one past the value array); padded slots are masked out
+    explicitly so they contribute neither bumps nor counts whatever tau is."""
+    valid = diag_idx < vals.shape[-1]
+    d = vals.at[diag_idx].get(mode="fill", fill_value=1.0)
+    tiny = (jnp.abs(d) < tau) & valid
+    bumped = jnp.where(tiny, jnp.where(d < 0, -tau, tau).astype(vals.dtype), d)
+    vals = vals.at[diag_idx].set(bumped, mode="drop")
+    return vals, jnp.sum(tiny, dtype=jnp.int32)
+
+
+perturb_diags = functools.partial(jax.jit, donate_argnums=(0,))(
+    _perturb_diags_body)
+perturb_diags_batched = functools.partial(jax.jit, donate_argnums=(0,))(
+    jax.vmap(_perturb_diags_body, in_axes=(0, None, 0)))
+
+
+def _factor_stats_body(vals, diag_idx, a_max):
+    """One fused reduction pass over the factored values: element pivot
+    growth ``max|LU| / max|A|`` and the smallest post-factorization
+    diagonal magnitude (the two no-pivot health numbers)."""
+    d = jnp.abs(vals[diag_idx])
+    growth = jnp.max(jnp.abs(vals)) / jnp.maximum(a_max, jnp.finfo(vals.dtype).tiny)
+    return growth, jnp.min(d)
+
+
+factor_stats = jax.jit(_factor_stats_body)
+factor_stats_batched = jax.jit(jax.vmap(_factor_stats_body,
+                                        in_axes=(0, None, 0)))

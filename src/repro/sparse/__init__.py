@@ -4,6 +4,7 @@ from .gen import (
     asic_like,
     circuit_jacobian,
     grid_laplacian,
+    ill_conditioned_jacobian,
     make_suite_matrix,
     rc_ladder,
 )
@@ -18,6 +19,7 @@ __all__ = [
     "asic_like",
     "circuit_jacobian",
     "grid_laplacian",
+    "ill_conditioned_jacobian",
     "make_suite_matrix",
     "rc_ladder",
     "read_matrix_market",

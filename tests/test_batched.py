@@ -95,6 +95,7 @@ def test_solve_batched_matches_loop_and_oracle(problem, batches, dtype,
         np.testing.assert_allclose(xs[i], x_np, rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_factorize_batched_use_pallas(problem):
     """The batched segmented kernel (batch folded into the D grid axis)."""
     A, _, plan = problem

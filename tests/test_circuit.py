@@ -76,6 +76,19 @@ def test_transient_sweep_long():
     assert (v_final.max(axis=0) - v_final.min(axis=0)).max() > 1e-4
 
 
+def test_transient_refined_consumes_solve_info():
+    """The Newton loop inspects GLU.solve_info after every refined solve;
+    on a healthy circuit every solve converges, so no re-scaling rebuild
+    fires and the waveform matches the unrefined run."""
+    ckt = rc_grid_circuit(4, 4, with_diodes=True, seed=2)
+    ref = transient(ckt, t_end=0.01, dt=0.005)
+    res = transient(ckt, t_end=0.01, dt=0.005, refine=2, static_pivot=1e-10)
+    assert res.n_rescalings == 0
+    assert np.isfinite(res.voltages).all()
+    np.testing.assert_allclose(res.voltages, ref.voltages, rtol=1e-7,
+                               atol=1e-9)
+
+
 def test_assembly_pattern_reuse():
     ckt = rc_grid_circuit(4, 4, seed=3)
     pat = ckt.pattern()

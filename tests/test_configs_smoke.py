@@ -23,7 +23,17 @@ def _batch(cfg, key, B=2, S=16):
     return batch
 
 
-@pytest.mark.parametrize("arch", list_archs())
+# the two heaviest configs go to the slow suite; every arch still compiles
+# in tier-1 via test_full_config_divisibility
+_SLOW_ARCHS = {"jamba-v0.1-52b", "deepseek-v2-lite-16b"}
+
+
+def _smoke_archs():
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+            for a in list_archs()]
+
+
+@pytest.mark.parametrize("arch", _smoke_archs())
 def test_smoke_forward(arch, key):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, key)
@@ -36,7 +46,7 @@ def test_smoke_forward(arch, key):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _smoke_archs())
 def test_smoke_train_step(arch, key):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, key)

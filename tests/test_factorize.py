@@ -69,6 +69,7 @@ def test_pallas_executor_matches_oracle():
     np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
 
 
+@pytest.mark.slow
 def test_double_u_correctness():
     """Level-parallel execution must equal strictly-sequential execution —
     this is exactly the hazard double-U dependencies guard against (paper
@@ -96,7 +97,11 @@ def test_trisolve(problem):
     assert np.abs(A.to_scipy() @ x_np - b).max() < 1e-8
 
 
-@pytest.mark.parametrize("ordering", ["none", "mindeg", "rcm"])
+@pytest.mark.parametrize("ordering", [
+    pytest.param("none", marks=pytest.mark.slow),  # no fill reduction: dense-ish
+    "mindeg",
+    "rcm",
+])
 def test_glu_facade_solve(ordering):
     A = circuit_jacobian(200, avg_degree=4.0, seed=13)
     rng = np.random.default_rng(1)

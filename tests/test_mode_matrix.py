@@ -48,7 +48,12 @@ def dense_problem():
 
 @pytest.mark.parametrize("mode_override", OVERRIDES,
                          ids=[o or "auto" for o in OVERRIDES])
-@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+@pytest.mark.parametrize("use_pallas", [
+    pytest.param(False, id="xla"),
+    # interpret-mode Pallas sweeps are the suite's heaviest cells; the
+    # xla cells plus test_pallas_executor_matches_oracle keep tier-1 honest
+    pytest.param(True, id="pallas", marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("fuse_levels", [False, True], ids=["nofuse", "fuse"])
 def test_mode_matrix_matches_oracle(problem, fuse_levels, use_pallas,
                                     mode_override):
@@ -84,6 +89,27 @@ def test_dense_tail_off_has_no_dense_group(dense_problem):
     _, plan, _ = dense_problem
     fx = JaxFactorizer(plan, dtype=jnp.float64, dense_tail=False)
     assert all(g.kind != "dense" for g in fx._groups)
+
+
+def test_mode_rule_uses_update_volume(problem, dense_problem):
+    """Fig. 10 criteria: a narrow level is PANEL only while its update
+    volume stays small — on the generator matrices at least one narrow
+    level carries enough update work to be (re)classified SEGMENTED, and
+    genuinely light narrow levels stay PANEL."""
+    pt = 16
+    flipped = light_panels = 0
+    for _, plan, _ in (problem, dense_problem):
+        for seg in plan.segments:
+            nc, nu = len(seg.cols), seg.n_upd
+            if nc <= pt and nu > 32 * pt * nc:
+                assert seg.mode == MODE_SEGMENTED, (nc, nu, seg.mode)
+                flipped += 1
+            elif nc <= pt:
+                assert seg.mode == MODE_PANEL, (nc, nu, seg.mode)
+                light_panels += 1
+    # the column-count-only rule would have classified these PANEL
+    assert flipped >= 1
+    assert light_panels >= 1
 
 
 def test_every_group_kind_exercised(problem, dense_problem):

@@ -46,8 +46,11 @@ def test_prefill_decode_match_train(arch, key):
     assert float(jnp.abs(ld - full[:, -1]).max()) < 3e-4
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "jamba-v0.1-52b", "mamba2-2.7b",
-                                  "deepseek-v2-lite-16b"])
+@pytest.mark.parametrize("arch", ["qwen2.5-3b",
+                                  pytest.param("jamba-v0.1-52b",
+                                               marks=pytest.mark.slow),
+                                  pytest.param("deepseek-v2-lite-16b",
+                                               marks=pytest.mark.slow)])
 def test_scan_equals_loop(arch, key):
     """lax.scan over the layer pattern is numerically identical to the
     unrolled python loop."""
@@ -81,7 +84,11 @@ def test_scan_equals_loop(arch, key):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.parametrize("arch", ["stablelm-1.6b", "mixtral-8x7b", "mamba2-2.7b"])
+@pytest.mark.parametrize("arch", ["stablelm-1.6b",
+                                  pytest.param("mixtral-8x7b",
+                                               marks=pytest.mark.slow),
+                                  pytest.param("mamba2-2.7b",
+                                               marks=pytest.mark.slow)])
 def test_gradients_finite(arch, key):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, key)

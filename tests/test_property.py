@@ -1,5 +1,6 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -54,6 +55,7 @@ def test_levelization_topological_and_complete(A):
     assert np.bincount(lv.levels, minlength=lv.num_levels).sum() == As.n
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(random_circuit_matrix())
 def test_parallel_factorization_equals_sequential(A):
@@ -90,6 +92,7 @@ def test_etree_fill_superset(A):
     assert gp_set <= et_set
 
 
+@pytest.mark.slow
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=64))
 def test_int8_quantization_error_bound(xs):

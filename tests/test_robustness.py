@@ -1,0 +1,323 @@
+"""Numerical-robustness subsystem: full MC64 scaling, pivot-growth
+diagnostics, static pivot perturbation, and batched iterative refinement.
+
+The acceptance scenario: on an ill-conditioned generator matrix
+(condition >= 1e10) where the unscaled pipeline's residual exceeds 1e-6,
+the scaled + refined float64 path reaches componentwise backward error
+<= 1e-12 in both single and batched modes, with ``GLU.solve_info``
+reporting pivot growth, perturbation count, and refinement iterations.
+"""
+from itertools import permutations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import GLU, factorize_numpy, max_product_matching
+from repro.sparse import circuit_jacobian, ill_conditioned_jacobian
+from repro.sparse.csc import csc_from_coo, csc_to_dense
+
+BERR_TOL = 1e-12
+
+
+# --------------------------------------------------------------------------
+# MC64 max-product matching + scaling
+# --------------------------------------------------------------------------
+
+def test_max_product_matching_invariants():
+    """Duff-Koster guarantee: |Dr A Dc| <= 1 everywhere, == 1 on the
+    matched entries, and the matching is a permutation."""
+    for seed in range(6):
+        A = ill_conditioned_jacobian(40 + 10 * seed, decades=8.0, seed=seed)
+        perm, Dr, Dc = max_product_matching(A)
+        assert sorted(perm) == list(range(A.n))
+        rows, cols, vals = A.to_coo()
+        scaled = np.abs(Dr[rows] * vals * Dc[cols.astype(np.int64)])
+        assert scaled[np.abs(vals) > 0].max() <= 1 + 1e-8
+        D = csc_to_dense(csc_from_coo(A.n, perm[rows], cols,
+                                      Dr[rows] * vals * Dc[cols.astype(np.int64)]))
+        np.testing.assert_allclose(np.abs(np.diag(D)), 1.0, atol=1e-8)
+
+
+def test_max_product_matching_optimal_small():
+    """Exhaustive check: the matching maximises the diagonal product."""
+    for seed in range(8):
+        A = ill_conditioned_jacobian(7, decades=6.0, seed=seed + 100)
+        perm, _, _ = max_product_matching(A)
+        D = csc_to_dense(A)
+        inv = np.argsort(perm)
+        ours = np.abs(np.prod([D[inv[j], j] for j in range(A.n)]))
+        best = max(np.abs(np.prod([D[p[j], j] for j in range(A.n)]))
+                   for p in permutations(range(A.n)))
+        assert ours >= best * (1 - 1e-9)
+
+
+def test_max_product_matching_rejects_singular():
+    # a column that is structurally present but numerically all-zero
+    A = circuit_jacobian(20, avg_degree=3.0, seed=1)
+    data = np.asarray(A.data).copy()
+    s, e = int(A.indptr[4]), int(A.indptr[5])
+    data[s:e] = 0.0
+    from repro.sparse.csc import CSC
+
+    with pytest.raises(ValueError):
+        max_product_matching(CSC(A.n, A.indptr, A.indices, data))
+
+
+# --------------------------------------------------------------------------
+# Acceptance scenario: ill-conditioned matrix, single + batched
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hard_problem():
+    A = ill_conditioned_jacobian(200, decades=12.0, seed=3)
+    assert np.linalg.cond(csc_to_dense(A)) >= 1e10
+    return A
+
+
+def test_unscaled_pipeline_fails(hard_problem):
+    """The pre-robustness pipeline (structural matching only) loses more
+    than 6 digits on this matrix — the bug class this PR detects/repairs."""
+    A = hard_problem
+    b = np.random.default_rng(0).normal(size=A.n)
+    g = GLU(A, mc64="structural", dtype=jnp.float64)
+    x = g.factorize().solve(b)
+    assert g.residual(b, x) > 1e-6
+
+
+def test_scaled_refined_single(hard_problem):
+    A = hard_problem
+    b = np.random.default_rng(0).normal(size=A.n)
+    g = GLU(A, dtype=jnp.float64, refine=5)
+    x = g.factorize().solve(b)
+    info = g.solve_info
+    assert info["backward_error"] <= BERR_TOL
+    assert info["converged"] is True or info["converged"] == np.True_
+    assert info["pivot_growth"] > 0
+    assert info["refine_iters"] >= 0
+    assert np.isfinite(x).all()
+
+
+def test_scaled_refined_batched(hard_problem):
+    A = hard_problem
+    rng = np.random.default_rng(1)
+    B = 4
+    batch = np.asarray(A.data)[None] * (
+        1.0 + 0.05 * rng.uniform(-1, 1, size=(B, A.nnz)))
+    bs = rng.normal(size=(B, A.n))
+    g = GLU(A, dtype=jnp.float64, refine=5)
+    xs = g.factorize_batched(batch).solve_batched(bs)
+    info = g.solve_info
+    assert xs.shape == (B, A.n)
+    assert info["batched"] is True
+    assert info["backward_error"].shape == (B,)
+    assert (info["backward_error"] <= BERR_TOL).all()
+    assert np.asarray(info["converged"]).all()
+    assert info["pivot_growth"].shape == (B,)
+    assert info["refine_iters"].shape == (B,)
+
+
+# --------------------------------------------------------------------------
+# Static pivot perturbation + refinement recovery
+# --------------------------------------------------------------------------
+
+def test_tiny_pivot_detected_then_repaired():
+    """Structurally nonsingular, numerically tiny pivots with scaling OFF:
+    the growth stats must expose the blow-up, and the static-pivot guard +
+    refinement must recover full accuracy on the same matrix."""
+    A = ill_conditioned_jacobian(150, decades=0.0, tiny_pivots=3, seed=5)
+    b = np.random.default_rng(0).normal(size=A.n)
+
+    plain = GLU(A, mc64="none", dtype=jnp.float64)
+    x_plain = plain.factorize().solve(b)
+    info = plain.solve_info
+    assert info["pivot_growth"] > 1e6          # detected, not silent
+    assert info["min_diag"] < 1e-10
+    assert plain.residual(b, x_plain) > 1e-8   # and genuinely wrong
+
+    guarded = GLU(A, mc64="none", dtype=jnp.float64,
+                  static_pivot=1e-10, refine=10)
+    x = guarded.factorize().solve(b)
+    info = guarded.solve_info
+    assert info["n_perturbed"] >= 1
+    assert info["backward_error"] <= BERR_TOL
+    assert guarded.residual(b, x) <= 1e-12
+
+
+def test_mc64_rematches_tiny_pivots():
+    """Full MC64 moves large entries onto the diagonal, so the same matrix
+    factorizes with small growth and no perturbations at all."""
+    A = ill_conditioned_jacobian(150, decades=0.0, tiny_pivots=3, seed=5)
+    b = np.random.default_rng(0).normal(size=A.n)
+    g = GLU(A, dtype=jnp.float64, static_pivot=1e-10, refine=5)
+    x = g.factorize().solve(b)
+    info = g.solve_info
+    assert info["pivot_growth"] < 1e3
+    assert info["n_perturbed"] == 0
+    assert info["backward_error"] <= BERR_TOL
+    assert g.residual(b, x) <= 1e-12
+
+
+def test_batched_perturbation_counts_per_matrix():
+    """One tiny-pivot matrix and one healthy matrix in the same batch:
+    the (B,) perturbation counts must tell them apart."""
+    A = circuit_jacobian(80, avg_degree=3.5, seed=9)
+    healthy = np.asarray(A.data).copy()
+    sick = healthy.copy()
+    sick[A.value_index(0, 0)] = 1e-300
+    # ordering="none" keeps column 0 first: no incoming updates can repair
+    # its diagonal before elimination, so the guard must fire
+    g = GLU(A, mc64="none", ordering="none", dtype=jnp.float64,
+            static_pivot=1e-10)
+    g.factorize_batched(np.stack([sick, healthy]))
+    info = g.solve_info
+    assert info["n_perturbed"][0] >= 1
+    assert info["n_perturbed"][1] == 0
+
+
+def test_perturb_diags_padding_never_counted():
+    """Padded diag slots must not inflate the bump count even when tau > 1
+    (the out-of-range gather fills with 1.0, which |1.0| < tau would hit)."""
+    from repro.kernels.ops import perturb_diags
+
+    vals = jnp.asarray(np.full(10, 100.0))
+    diag_idx = jnp.asarray(np.array([0, 1, 10, 10], dtype=np.int32))
+    out, cnt = perturb_diags(vals, diag_idx, jnp.asarray(1000.0))
+    assert int(cnt) == 2                       # only the two real slots
+    assert np.asarray(out)[:2].tolist() == [1000.0, 1000.0]
+    assert (np.asarray(out)[2:] == 100.0).all()
+
+
+# --------------------------------------------------------------------------
+# Growth stats vs host oracle
+# --------------------------------------------------------------------------
+
+def test_growth_stats_match_numpy_oracle():
+    A = ill_conditioned_jacobian(120, decades=6.0, seed=11)
+    g = GLU(A, dtype=jnp.float64)
+    g.factorize()
+    info = g.solve_info
+    # oracle on the exact system the device factorizes (scaled + permuted)
+    filled = g.pattern.filled_csc(g._A_perm)
+    lu = factorize_numpy(g.pattern, filled.data)
+    a_max = np.abs(np.asarray(g._A_perm.data)).max()
+    np.testing.assert_allclose(info["pivot_growth"],
+                               np.abs(lu).max() / a_max, rtol=1e-12)
+    np.testing.assert_allclose(info["min_diag"],
+                               np.abs(lu[g.plan.diag_idx]).min(), rtol=1e-12)
+
+
+def test_growth_stats_batched_match_single():
+    A = circuit_jacobian(100, avg_degree=4.0, seed=13)
+    rng = np.random.default_rng(2)
+    batch = np.asarray(A.data)[None] * (
+        1.0 + 0.1 * rng.uniform(-1, 1, size=(3, A.nnz)))
+    g = GLU(A, dtype=jnp.float64)
+    g.factorize_batched(batch)
+    batched = g.solve_info
+    for i in range(3):
+        g.factorize(batch[i])
+        single = g.solve_info
+        np.testing.assert_allclose(batched["pivot_growth"][i],
+                                   single["pivot_growth"], rtol=1e-12)
+        np.testing.assert_allclose(batched["min_diag"][i],
+                                   single["min_diag"], rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# solve_info contract + facade plumbing
+# --------------------------------------------------------------------------
+
+def test_solve_info_contract_single():
+    A = circuit_jacobian(60, avg_degree=3.5, seed=17)
+    g = GLU(A, dtype=jnp.float64)
+    assert g.solve_info is None
+    b = np.ones(A.n)
+    g.factorize()
+    info = g.solve_info
+    assert {"batched", "pivot_growth", "min_diag", "n_perturbed",
+            "refine_iters", "backward_error", "converged"} <= set(info)
+    assert info["batched"] is False
+    assert info["n_perturbed"] is None         # guard off
+    g.solve(b)                                 # refine=0 default
+    info = g.solve_info
+    assert info["refine_iters"] == 0
+    assert info["backward_error"] is None and info["converged"] is None
+    g.solve(b, refine=2)
+    info = g.solve_info
+    assert isinstance(info["backward_error"], float)
+    assert isinstance(info["refine_iters"], int)
+
+
+def test_refactorize_solve_single_collapses_info():
+    """The single-matrix convenience form of refactorize_solve must leave
+    scalar (not shape-(1,)) diagnostics, per the solve_info contract."""
+    A = circuit_jacobian(60, avg_degree=3.5, seed=21)
+    b = np.random.default_rng(7).normal(size=A.n)
+    g = GLU(A, dtype=jnp.float64, refine=2)
+    g.refactorize_solve(np.asarray(A.data), b)
+    info = g.solve_info
+    assert info["batched"] is False
+    assert isinstance(info["backward_error"], float)
+    assert isinstance(info["converged"], bool)
+    assert isinstance(info["refine_iters"], int)
+    assert isinstance(info["pivot_growth"], float)
+
+
+def test_stale_factor_invalidation():
+    """Regression: a fresh single factorization must invalidate the batched
+    factor cache and vice versa — never solve with other values' factors."""
+    A = circuit_jacobian(70, avg_degree=3.5, seed=19)
+    rng = np.random.default_rng(3)
+    batch = np.asarray(A.data)[None] * (
+        1.0 + 0.3 * rng.uniform(-1, 1, size=(2, A.nnz)))
+    bs = rng.normal(size=(2, A.n))
+    g = GLU(A, dtype=jnp.float64)
+    g.factorize_batched(batch)
+    g.factorize()                              # fresh single values
+    with pytest.raises(RuntimeError):
+        g.solve_batched(bs)                    # batched cache is gone
+    g.factorize_batched(batch)                 # fresh batched values
+    with pytest.raises(RuntimeError):
+        g.solve(bs[0])                         # single cache is gone too
+
+
+def test_facade_plumbs_executor_knobs():
+    """dense_tail / dense_tail_density / mode_override / interpret /
+    static_pivot reach JaxFactorizer through the public facade."""
+    from repro.core import fill_reducing_ordering
+
+    A0 = circuit_jacobian(500, avg_degree=4.0, seed=22)
+    perm = fill_reducing_ordering(A0, "mindeg")
+    A = A0.permute(perm, perm)
+    g = GLU(A, ordering="none", dtype=jnp.float64, dense_tail=True,
+            dense_tail_density=0.2, static_pivot=1e-10, interpret=True)
+    fx = g._factorizer
+    assert fx.static_pivot == 1e-10
+    # this generator/ordering pair is known to produce a dense tail (same
+    # instance as the executor-level dense-tail tests) — the facade must
+    # reach it, that's the point of the plumbing
+    assert fx.dense_tail_info is not None
+    assert any(grp.kind == "dense" for grp in fx._groups)
+    b = np.random.default_rng(4).normal(size=A.n)
+    x = g.factorize().solve(b, refine=2)
+    assert g.solve_info["backward_error"] <= BERR_TOL
+    assert g.residual(b, x) < 1e-10
+
+    A_small = circuit_jacobian(100, avg_degree=4.0, seed=24)
+    g2 = GLU(A_small, dtype=jnp.float64, mode_override="flat")
+    assert all(grp.mode == "flat" for grp in g2._factorizer._groups)
+    b2 = np.random.default_rng(6).normal(size=A_small.n)
+    x2 = g2.factorize().solve(b2)
+    assert g2.residual(b2, x2) < 1e-10
+
+
+def test_refinement_float32_improves():
+    """Refinement also helps the paper's float32 mode: a couple of sweeps
+    reach float32-level componentwise backward error."""
+    A = circuit_jacobian(120, avg_degree=4.0, seed=23)
+    b = np.random.default_rng(5).normal(size=A.n)
+    g = GLU(A, dtype=jnp.float32, refine=4)
+    g.factorize().solve(b)
+    assert g.solve_info["backward_error"] <= 4 * np.finfo(np.float32).eps

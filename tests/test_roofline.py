@@ -44,6 +44,7 @@ def test_roofline_terms_and_dominance():
     assert abs(r.useful_fraction - 1.0) < 1e-9
 
 
+@pytest.mark.slow
 def test_dryrun_cell_subprocess(tmp_path):
     """Run one real dry-run cell (whisper, smallest arch) on 512 fake devices."""
     code = (

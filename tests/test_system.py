@@ -8,6 +8,7 @@ from repro.core import GLU
 from repro.sparse import make_suite_matrix
 
 
+@pytest.mark.slow
 def test_full_flow_on_suite_matrix():
     """MC64 -> ordering -> symbolic -> levelize -> factorize -> solve,
     on a circuit-style matrix, with refactorization (the SPICE loop)."""
@@ -35,6 +36,7 @@ def test_levels_reduce_sequential_steps():
     assert g.num_levels < A.n / 3
 
 
+@pytest.mark.slow
 def test_float32_matches_paper_precision():
     """Paper used fp32 (GPU atomics limitation); fp32 here stays within
     engineering tolerance of fp64 on well-conditioned circuit matrices."""

@@ -21,6 +21,7 @@ def tiny():
     return cfg
 
 
+@pytest.mark.slow
 def test_loss_decreases(tiny, key):
     cfg = tiny
     params = init_params(cfg, key)
