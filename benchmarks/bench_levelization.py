@@ -1,8 +1,12 @@
-"""Paper Table II: levelization runtime + level counts.
+"""Paper Table II: levelization runtime + level counts, plus the planner's
+preprocessing-vs-numeric breakdown per symbolic engine.
 
 Compares GLU2.0's exact double-U detection (Alg. 3, the O(n^3)-flavoured
 triple scan) against this work's relaxed detection (Alg. 4) — the paper's
-headline 2-3 orders of magnitude preprocessing speedup.
+headline 2-3 orders of magnitude preprocessing speedup — and, per engine
+(gp / etree / vectorized), how the remaining host preprocessing splits
+against one device numeric factorization, including the plan-cache-hit
+rebuild cost.
 """
 from __future__ import annotations
 
@@ -60,5 +64,61 @@ def main(rows=None):
     return out
 
 
+def preprocessing_breakdown(engines=("gp", "etree", "vectorized"),
+                            gp_limit: int = 6000):
+    """Per-engine host preprocessing vs device numeric time.
+
+    For every suite matrix and symbolic engine: the planner's per-stage
+    build seconds (ordering / symbolic fill / levelize / plan), one numeric
+    factorization on the resulting plan, and the cost of a second, cache-hit
+    construction (the transient re-scaling rebuild path).
+    """
+    import jax
+
+    from repro.core import GLU, PlanCache
+
+    out = []
+    print("# preprocessing_breakdown: matrix,engine,n,nnz_filled,levels,"
+          "t_order_ms,t_symbolic_ms,t_levelize_ms,t_plan_ms,t_preproc_ms,"
+          "t_numeric_ms,t_cached_rebuild_ms")
+    for name, A in bench_matrices():
+        for engine in engines:
+            if engine == "gp" and A.n > gp_limit:
+                continue            # per-column python DFS: too slow to time
+            cache = PlanCache(capacity=2)
+            t0 = time.perf_counter()
+            glu = GLU(A, ordering="none", symbolic=engine, mc64="none",
+                      plan_cache=cache)
+            t_build = (time.perf_counter() - t0) * 1e3
+            bs = {k: v * 1e3 for k, v in
+                  glu.symbolic_plan.build_seconds.items()}
+            vals = np.asarray(A.data)
+            glu.factorize(vals)     # warmup: jit compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(glu.factorize(vals).factorized_values())
+            t_num = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            glu2 = GLU(A, ordering="none", symbolic=engine, mc64="none",
+                       plan_cache=cache)
+            t_cached = (time.perf_counter() - t0) * 1e3
+            assert glu2.plan_from_cache and cache.stats.builds == 1
+            line = (f"{name},{engine},{A.n},{glu.nnz_filled},"
+                    f"{glu.num_levels},{bs['ordering']:.1f},"
+                    f"{bs['symbolic']:.1f},{bs['levelize']:.1f},"
+                    f"{bs['plan']:.1f},{t_build:.1f},{t_num:.1f},"
+                    f"{t_cached:.1f}")
+            print(line, flush=True)
+            row(f"preproc_{name}_{engine}", bs["total"] * 1e3,
+                f"numeric_ms={t_num:.1f} cached_rebuild_ms={t_cached:.1f}")
+            out.append({
+                "matrix": name, "engine": engine, "n": A.n,
+                "nnz_filled": glu.nnz_filled,
+                "build_ms": bs, "t_preproc_ms": t_build,
+                "t_numeric_ms": t_num, "t_cached_rebuild_ms": t_cached,
+            })
+    return out
+
+
 if __name__ == "__main__":
     main()
+    preprocessing_breakdown()

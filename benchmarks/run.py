@@ -21,6 +21,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     print("# === Table II: levelization (relaxed vs double-U detection) ===")
     bench_levelization.main()
+    print("# === Planner: preprocessing vs numeric breakdown per engine ===")
+    bench_levelization.preprocessing_breakdown()
     print("# === Table I: numeric factorization ===")
     bench_factorization.main()
     print("# === Table III: kernel-mode ablation ===")

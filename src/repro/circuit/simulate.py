@@ -5,6 +5,11 @@ symbolic plan is built ONCE; every Newton iterate only refactorizes new
 values on the fixed pattern — the exact workload GLU3.0 accelerates
 ("the numeric factorization on GPU might be repeated many times when
 solving a nonlinear equation with Newton-Raphson method").
+
+MC64 re-scaling rebuilds construct a fresh ``GLU`` on the *same* pattern, so
+they go through the planner's content-addressed cache: only the
+value-dependent matching/scaling is recomputed, the symbolic plan is a
+cache hit (``plan_cache_hits`` on the results counts them).
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ class TransientResult:
     solve_seconds: float
     max_residual: float
     n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
+    plan_cache_hits: int = 0    # GLU constructions served by the plan cache
 
 
 def transient(
@@ -44,6 +50,7 @@ def transient(
     use_pallas: bool = False,
     glu: Optional[GLU] = None,
     refine: Optional[int] = None,
+    refine_tol: Optional[float] = None,
     static_pivot: Optional[float] = None,
 ) -> TransientResult:
     """Backward-Euler + Newton transient.  ``refine=None`` (default) leaves
@@ -70,14 +77,17 @@ def transient(
 
     A0 = CSC(pat.n, pat.indptr, pat.indices, vals0)
     glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
-                      refine=refine or 0, static_pivot=static_pivot)
+                      refine=refine or 0, refine_tol=refine_tol,
+                      static_pivot=static_pivot)
     # re-scaling rebuilds only apply to a GLU this driver constructed: a
     # caller-prebuilt solver may carry configuration (dense_tail, custom
     # tolerances, ...) that glu_kwargs cannot reproduce, so it is never
     # silently swapped out mid-run
     owns_glu = glu is None
+    n_plan_hits = 0
     if owns_glu:
         glu = GLU(A0, **glu_kwargs)
+        n_plan_hits += int(glu.plan_from_cache)
     setup_s = time.perf_counter() - t0
 
     steps = int(round(t_end / dt))
@@ -102,8 +112,9 @@ def transient(
             v_new = (glu.solve(rhs) if refine is None
                      else glu.solve(rhs, refine=refine))
             if refine and owns_glu and not rescaled_this_step:
-                info = glu.solve_info
-                if info is not None and info.get("converged") is False:
+                # cheap flag read: must not force solve_info's deferred
+                # pivot-stat reductions every Newton iterate
+                if glu.refine_converged is False:
                     # refinement stalled: the setup-time scaling no longer
                     # fits this operating point — re-run MC64 on the current
                     # Jacobian and retry the solve on the fresh plan.  At
@@ -122,6 +133,7 @@ def transient(
                         pass
                     else:
                         n_rescale += 1
+                        n_plan_hits += int(glu.plan_from_cache)
                         glu.factorize(vals)
                         n_fact += 1
                         v_new = glu.solve(rhs)
@@ -147,6 +159,7 @@ def transient(
         solve_seconds=solve_s,
         max_residual=max_res,
         n_rescalings=n_rescale,
+        plan_cache_hits=n_plan_hits,
     )
 
 
@@ -161,6 +174,7 @@ class TransientSweepResult:
     solve_seconds: float
     max_residual: float         # worst over sweep copies and time steps
     n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
+    plan_cache_hits: int = 0    # GLU constructions served by the plan cache
 
 
 def perturbed_copies(ckt: Circuit, scales) -> list:
@@ -190,6 +204,7 @@ def transient_sweep(
     dtype=None,
     use_pallas: bool = False,
     refine: Optional[int] = None,
+    refine_tol: Optional[float] = None,
     static_pivot: Optional[float] = None,
 ) -> TransientSweepResult:
     """Run B parameter-perturbed copies of ``ckt`` through backward-Euler +
@@ -215,8 +230,10 @@ def transient_sweep(
     from ..sparse.csc import CSC
 
     glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
-                      refine=refine or 0, static_pivot=static_pivot)
+                      refine=refine or 0, refine_tol=refine_tol,
+                      static_pivot=static_pivot)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0), **glu_kwargs)
+    n_plan_hits = int(glu.plan_from_cache)
     setup_s = time.perf_counter() - t0
 
     steps = int(round(t_end / dt))
@@ -244,14 +261,17 @@ def transient_sweep(
             v_new = glu.refactorize_solve(vals, rhs)
             n_fact += 1
             if refine and not rescaled_this_step:
-                info = glu.solve_info
-                conv = None if info is None else info.get("converged")
+                # cheap flag read per iterate; the full solve_info (with its
+                # deferred device reductions) is only pulled on the rare
+                # rebuild path below
+                conv = glu.refine_converged
                 if conv is not None and not np.asarray(conv).all():
                     # re-scale on the worst copy's current Jacobian (one
                     # shared plan, so one representative picks the scaling);
                     # at most once per time step, and a numerically singular
                     # representative skips the rebuild — same rationale as
                     # ``transient``
+                    info = glu.solve_info
                     worst = int(np.argmax(np.asarray(info["backward_error"])))
                     rescaled_this_step = True
                     try:
@@ -261,6 +281,7 @@ def transient_sweep(
                         pass
                     else:
                         n_rescale += 1
+                        n_plan_hits += int(glu.plan_from_cache)
                         v_new = glu.refactorize_solve(vals, rhs)
                         n_fact += 1
             dv = np.abs(v_new - v_it).max()
@@ -286,6 +307,7 @@ def transient_sweep(
         solve_seconds=solve_s,
         max_residual=max_res,
         n_rescalings=n_rescale,
+        plan_cache_hits=n_plan_hits,
     )
 
 

@@ -9,6 +9,7 @@ from .dependency import (
     level_stats,
     levelize,
     levelize_relaxed,
+    longest_path_levels,
 )
 from .factorize import (
     JaxFactorizer,
@@ -25,18 +26,47 @@ from .ordering import (
     zero_free_diagonal,
 )
 from .plan import FactorizePlan, build_plan
-from .symbolic import FilledPattern, symbolic_fillin, symbolic_fillin_etree, symbolic_fillin_gp
+from .planner import (
+    MC64Scaling,
+    PlanCache,
+    PlanCacheStats,
+    SymbolicPlan,
+    build_symbolic_plan,
+    compute_scaling,
+    default_plan_cache,
+    plan_factorization,
+    plan_key,
+    set_default_plan_cache,
+)
+from .symbolic import (
+    FilledPattern,
+    symbolic_fillin,
+    symbolic_fillin_etree,
+    symbolic_fillin_gp,
+    symbolic_fillin_vectorized,
+)
 from .triangular import JaxTriangularSolver, trisolve_numpy
 
 __all__ = [
     "GLU",
     "Levelization",
+    "MC64Scaling",
+    "PlanCache",
+    "PlanCacheStats",
+    "SymbolicPlan",
+    "build_symbolic_plan",
+    "compute_scaling",
+    "default_plan_cache",
+    "plan_factorization",
+    "plan_key",
+    "set_default_plan_cache",
     "dependencies_doubleu",
     "dependencies_relaxed",
     "dependencies_upattern",
     "level_stats",
     "levelize",
     "levelize_relaxed",
+    "longest_path_levels",
     "JaxFactorizer",
     "factorize_numpy",
     "factorize_numpy_fast",
@@ -53,6 +83,7 @@ __all__ = [
     "symbolic_fillin",
     "symbolic_fillin_etree",
     "symbolic_fillin_gp",
+    "symbolic_fillin_vectorized",
     "JaxTriangularSolver",
     "trisolve_numpy",
 ]

@@ -5,8 +5,15 @@
   levelization -> plan -> (re)factorize on device -> triangular solve
   (+ optional batched iterative refinement)
 
-Construction does all host-side symbolic work once; ``factorize``/``solve``
-are the fast repeated path (SPICE Newton iterations reuse the plan).
+All host-side preprocessing lives in the planner subsystem
+(:mod:`repro.core.planner`): construction asks it for a
+:class:`~repro.core.planner.SymbolicPlan` — by default through the
+process-wide content-addressed plan cache, so re-constructing on a pattern
+that was already analyzed (a Newton re-scaling rebuild, a sweep corner, a
+repeated benchmark) performs zero symbolic work (``plan_from_cache`` reports
+which path was taken).  ``GLU.from_plan`` consumes a prebuilt plan directly;
+``factorize``/``solve`` are the fast repeated path (SPICE Newton iterations
+reuse the plan).
 
 Permutation algebra: with row_map/col_map (old -> new),
 ``A_perm[row_map[i], col_map[j]] = A[i, j]`` and solving ``A x = b`` becomes
@@ -30,11 +37,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..sparse.csc import CSC
-from .dependency import levelize_relaxed
 from .factorize import JaxFactorizer
-from .ordering import fill_reducing_ordering, max_product_matching, zero_free_diagonal
-from .plan import build_plan
-from .symbolic import symbolic_fillin
+from .planner import (
+    MC64Scaling,
+    SymbolicPlan,
+    compute_scaling,
+    plan_factorization,
+)
 from .triangular import JaxTriangularSolver
 
 __all__ = ["GLU"]
@@ -58,6 +67,7 @@ class GLU:
         dense_tail_density: float = 0.25,
         mode_override: Optional[str] = None,
         interpret: bool = True,
+        plan_cache="default",
     ):
         """``mc64``: ``"scale"``/``True`` — full Duff-Koster max-product
         matching with Dr/Dc scalings; ``"structural"`` — zero-free diagonal
@@ -71,47 +81,107 @@ class GLU:
         ``solve``/``solve_batched`` (overridable per call); ``refine_tol``
         is the componentwise-backward-error stopping test (default 4 ulp of
         the value dtype).
+
+        ``plan_cache``: where symbolic plans are looked up / stored —
+        ``"default"`` (the process-wide content-addressed cache), a
+        :class:`~repro.core.planner.PlanCache`, or ``None`` to always
+        rebuild.  ``plan_from_cache`` reports whether construction reused a
+        cached plan (and therefore did zero symbolic work).
         """
+        plan, scaling, from_cache = plan_factorization(
+            A, ordering=ordering, symbolic=symbolic, mc64=mc64,
+            panel_threshold=panel_threshold, cache=plan_cache)
+        self._setup(
+            plan, scaling, A, from_cache=from_cache, dtype=dtype,
+            fuse_levels=fuse_levels, use_pallas=use_pallas,
+            static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
+            dense_tail=dense_tail, dense_tail_density=dense_tail_density,
+            mode_override=mode_override, interpret=interpret)
+
+    @classmethod
+    def from_plan(
+        cls,
+        plan: SymbolicPlan,
+        A: CSC,
+        dtype=jnp.float64,
+        mc64="scale",
+        fuse_levels: bool = True,
+        use_pallas: bool = False,
+        static_pivot: Optional[float] = None,
+        refine: int = 0,
+        refine_tol: Optional[float] = None,
+        dense_tail: bool = False,
+        dense_tail_density: float = 0.25,
+        mode_override: Optional[str] = None,
+        interpret: bool = True,
+    ) -> "GLU":
+        """Build a GLU around a prebuilt :class:`SymbolicPlan`, skipping all
+        symbolic work.
+
+        ``A`` must carry the exact pattern the plan was built for, and the
+        MC64 matching of its values must reproduce ``plan.row_perm`` (for
+        ``mc64="scale"`` the matching is recomputed from the new values —
+        only the resulting permutation has to agree; the Dr/Dc scalings are
+        free to differ).  Raises ``ValueError`` otherwise.
+        """
+        if not plan.matches_pattern(A):
+            raise ValueError("matrix pattern differs from the plan's pattern")
+        scaling = compute_scaling(A, mc64)
+        if not np.array_equal(scaling.row_perm, plan.row_perm):
+            raise ValueError(
+                "MC64 matching of these values differs from the plan's "
+                "row permutation; rebuild the plan (e.g. GLU(A, ...))")
+        self = cls.__new__(cls)
+        self._setup(
+            plan, scaling, A, from_cache=True, dtype=dtype,
+            fuse_levels=fuse_levels, use_pallas=use_pallas,
+            static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
+            dense_tail=dense_tail, dense_tail_density=dense_tail_density,
+            mode_override=mode_override, interpret=interpret)
+        return self
+
+    def _setup(
+        self,
+        plan: SymbolicPlan,
+        scaling: MC64Scaling,
+        A: CSC,
+        from_cache: bool,
+        dtype,
+        fuse_levels: bool,
+        use_pallas: bool,
+        static_pivot: Optional[float],
+        refine: int,
+        refine_tol: Optional[float],
+        dense_tail: bool,
+        dense_tail_density: float,
+        mode_override: Optional[str],
+        interpret: bool,
+    ) -> None:
         self.n = A.n
+        self.symbolic_plan = plan
+        self.plan_from_cache = bool(from_cache)
         self._A_scipy = A.to_scipy()
-        rows0, cols0, _ = A.to_coo()
-        # --- preprocessing: MC64 matching + scaling ------------------------
-        if mc64 in (True, "scale"):
-            row_perm, Dr, Dc = max_product_matching(A)
-        elif mc64 == "structural":
-            row_perm = zero_free_diagonal(A)
-            Dr = Dc = np.ones(A.n)
-        elif mc64 in (False, None, "none"):
-            row_perm = np.arange(A.n, dtype=np.int64)
-            Dr = Dc = np.ones(A.n)
-        else:
-            raise ValueError(f"unknown mc64 mode {mc64!r}")
-        self.Dr, self.Dc = Dr, Dc
+        rows0 = np.asarray(A.indices, dtype=np.int64)
+        cols0 = np.repeat(np.arange(A.n, dtype=np.int64), np.diff(A.indptr))
+        self.Dr, self.Dc = scaling.Dr, scaling.Dc
         # per-original-entry scale factor: entry (i, j) -> Dr[i] * Dc[j];
         # identity for the unscaled modes, where the multiply is skipped
-        self._scale_data = Dr[rows0] * Dc[cols0.astype(np.int64)]
+        self._scale_data = self.Dr[rows0] * self.Dc[cols0]
         self._scale_identity = bool(np.all(self._scale_data == 1.0))
-        A_scaled = CSC(A.n, A.indptr, A.indices,
-                       np.asarray(A.data, dtype=np.float64) * self._scale_data)
-        A_rp = A_scaled.permute(row_perm, np.arange(A.n, dtype=np.int64))
-        sym_perm = fill_reducing_ordering(A_rp, ordering)
-        self.row_map = sym_perm[row_perm]       # old row -> new row
-        self.col_map = sym_perm                 # old col -> new col
-        self._inv_row = np.argsort(self.row_map)
-        A_perm = A_scaled.permute(self.row_map, self.col_map)
-        self._A_perm = A_perm
+        self.row_map = plan.row_map             # old row -> new row
+        self.col_map = plan.col_map             # old col -> new col
+        self._inv_row = plan.inv_row
         # original-entry-order -> permuted-entry-order map (for refactorize)
-        self._data_perm = np.lexsort((self.row_map[rows0], self.col_map[cols0]))
+        self._data_perm = plan.data_perm
+        scaled = np.asarray(A.data, dtype=np.float64) * self._scale_data
+        self._A_perm = CSC(A.n, plan.perm_indptr, plan.perm_indices,
+                           scaled[self._data_perm])
         # scaled-A SpMV layout (permuted pattern) for iterative refinement
-        rp, cp, _ = A_perm.to_coo()
-        self._spmv_rows = jnp.asarray(rp.astype(np.int32))
-        self._spmv_cols = jnp.asarray(cp.astype(np.int32))
-
-        # --- symbolic ------------------------------------------------------
-        self.pattern = symbolic_fillin(A_perm, symbolic)
-        self.levelization = levelize_relaxed(self.pattern)
-        self.plan = build_plan(self.pattern, self.levelization,
-                               panel_threshold=panel_threshold)
+        self._spmv_rows = jnp.asarray(plan.spmv_rows)
+        self._spmv_cols = jnp.asarray(plan.spmv_cols)
+        self.pattern = plan.pattern
+        self.levelization = plan.levelization
+        self.plan = plan.fplan
         self._factorizer = JaxFactorizer(
             self.plan, dtype=dtype, fuse_levels=fuse_levels,
             use_pallas=use_pallas, mode_override=mode_override,
@@ -298,6 +368,21 @@ class GLU:
             self._info = {"batched": False, "pivot_growth": None,
                           "min_diag": None, "n_perturbed": None}
         self._info.update(rinfo)
+
+    @property
+    def refine_converged(self):
+        """Convergence flag (and nothing else) of the latest refined solve:
+        scalar bool / (B,) bool array, or None when the last solve ran
+        unrefined.  Unlike ``solve_info`` it does not force the deferred
+        pivot-growth/min-diag device reductions, so the Newton hot loop can
+        poll it every iterate for free."""
+        if self._info is None:
+            return None
+        v = self._info.get("converged")
+        if v is None or isinstance(v, bool):
+            return v
+        a = np.asarray(v)
+        return bool(a.item()) if a.ndim == 0 else a
 
     @property
     def solve_info(self) -> Optional[dict]:

@@ -32,6 +32,7 @@ __all__ = [
     "minimum_degree",
     "rcm",
     "fill_reducing_ordering",
+    "resolve_ordering_method",
 ]
 
 
@@ -223,13 +224,21 @@ def rcm(A: CSC) -> np.ndarray:
     return perm
 
 
+def resolve_ordering_method(n: int, method: str = "auto") -> str:
+    """Resolve ``"auto"`` to the concrete ordering used for an n-column matrix
+    (part of the plan-cache key contract: keys are stored under resolved
+    method names so ``"auto"`` and its resolution share one plan)."""
+    if method == "auto":
+        return "mindeg" if n <= 6000 else "rcm"
+    if method in ("none", "mindeg", "rcm"):
+        return method
+    raise ValueError(f"unknown ordering method {method!r}")
+
+
 def fill_reducing_ordering(A: CSC, method: str = "auto") -> np.ndarray:
+    method = resolve_ordering_method(A.n, method)
     if method == "none":
         return np.arange(A.n, dtype=np.int64)
-    if method == "auto":
-        method = "mindeg" if A.n <= 6000 else "rcm"
     if method == "mindeg":
         return minimum_degree(A)
-    if method == "rcm":
-        return rcm(A)
-    raise ValueError(f"unknown ordering method {method!r}")
+    return rcm(A)

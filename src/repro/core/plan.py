@@ -26,8 +26,9 @@ from typing import Optional
 
 import numpy as np
 
+from ..sparse.csc import concat_ranges as _concat_ranges
 from ..sparse.csc import csc_transpose_pattern
-from .dependency import Levelization, levelize_relaxed
+from .dependency import Levelization, levelize_relaxed, longest_path_levels
 from .symbolic import FilledPattern
 
 __all__ = ["FactorizePlan", "LevelSegment", "build_plan", "MODE_FLAT", "MODE_SEGMENTED", "MODE_PANEL"]
@@ -35,23 +36,6 @@ __all__ = ["FactorizePlan", "LevelSegment", "build_plan", "MODE_FLAT", "MODE_SEG
 MODE_FLAT = "flat"            # one fused scatter-add (type A levels)
 MODE_SEGMENTED = "segmented"  # Pallas per-destination-column kernel (type B)
 MODE_PANEL = "panel"          # few long columns: per-column dense panel (type C)
-
-
-def _concat_ranges(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
-    """Vectorised concatenation of [starts[i], ends[i]) ranges."""
-    counts = (ends - starts).astype(np.int64)
-    total = int(counts.sum())
-    if total == 0:
-        return np.empty(0, dtype=np.int64)
-    out = np.ones(total, dtype=np.int64)
-    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    nz = counts > 0
-    first = offsets[nz]
-    starts_nz = starts[nz].astype(np.int64)
-    counts_nz = counts[nz]
-    out[first] = starts_nz
-    out[first[1:]] -= (starts_nz + counts_nz)[:-1] - 1
-    return np.cumsum(out)
 
 
 @dataclasses.dataclass
@@ -140,14 +124,16 @@ def build_plan(
         lv = levelize_relaxed(As)
     levels = lv.levels.astype(np.int64)
 
-    # diagonal positions (rows sorted per column -> searchsorted)
-    diag_pos = np.empty(n, dtype=np.int64)
-    for j in range(n):
-        s, e = indptr[j], indptr[j + 1]
-        p = s + np.searchsorted(indices[s:e], j)
-        if p >= e or indices[p] != j:
-            raise ValueError(f"zero diagonal at column {j} (run MC64 first)")
-        diag_pos[j] = p
+    # diagonal positions: one flat searchsorted over column-major (col, row)
+    # keys, which are globally sorted for a CSC pattern
+    cols_of = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    fkeys = cols_of * n + indices.astype(np.int64)
+    diag_pos = np.searchsorted(fkeys, np.arange(n, dtype=np.int64) * (n + 1))
+    bad = diag_pos >= len(fkeys)
+    bad[~bad] = fkeys[diag_pos[~bad]] != np.arange(n, dtype=np.int64)[~bad] * (n + 1)
+    if bad.any():
+        j = int(np.flatnonzero(bad)[0])
+        raise ValueError(f"zero diagonal at column {j} (run MC64 first)")
     l_start = diag_pos + 1
     l_end = indptr[1:]
     nnz_l = (l_end - l_start).astype(np.int64)
@@ -161,36 +147,19 @@ def build_plan(
     norm_ptr = np.concatenate([[0], np.cumsum(norm_counts)])
 
     # --- update triples, destination-column major --------------------------
-    lidx_parts, uidx_parts, didx_parts, lev_parts, dst_parts = [], [], [], [], []
-    for k in range(n):
-        s, e = indptr[k], indptr[k + 1]
-        dpos = diag_pos[k]
-        jj = indices[s:dpos].astype(np.int64)       # U entries: rows j < k
-        if len(jj) == 0:
-            continue
-        cnt = nnz_l[jj]
-        if cnt.sum() == 0:
-            continue
-        u_flat = np.arange(s, dpos, dtype=np.int64)
-        l_flat = _concat_ranges(l_start[jj], l_end[jj])
-        l_rows = indices[l_flat]
-        d_flat = s + np.searchsorted(indices[s:e], l_rows)
-        lidx_parts.append(l_flat)
-        uidx_parts.append(np.repeat(u_flat, cnt))
-        didx_parts.append(d_flat)
-        lev_parts.append(np.repeat(levels[jj], cnt))
-        dst_parts.append(np.full(int(cnt.sum()), k, dtype=np.int64))
-
-    if lidx_parts:
-        lidx = np.concatenate(lidx_parts)
-        uidx = np.concatenate(uidx_parts)
-        didx = np.concatenate(didx_parts)
-        lev = np.concatenate(lev_parts)
-        dst = np.concatenate(dst_parts)
-        srt = np.argsort(lev, kind="stable")  # within level: dst ascending
-        lidx, uidx, didx, lev, dst = lidx[srt], uidx[srt], didx[srt], lev[srt], dst[srt]
-    else:
-        lidx = uidx = didx = lev = dst = np.empty(0, dtype=np.int64)
+    # one bulk pass over all U entries: the per-destination-column loop is a
+    # gather (U entry -> source column) + ranged concat (source L rows) +
+    # one flat searchsorted into the global (col, row) key array
+    u_flat = _concat_ranges(indptr[:-1], diag_pos)   # U entries, col-major
+    jj = indices[u_flat].astype(np.int64)            # source column per U entry
+    cnt = nnz_l[jj]
+    lidx = _concat_ranges(l_start[jj], l_end[jj])
+    uidx = np.repeat(u_flat, cnt)
+    dst = np.repeat(cols_of[u_flat], cnt)
+    didx = np.searchsorted(fkeys, dst * n + indices[lidx].astype(np.int64))
+    lev = np.repeat(levels[jj], cnt)
+    srt = np.argsort(lev, kind="stable")  # within level: dst ascending
+    lidx, uidx, didx, lev, dst = lidx[srt], uidx[srt], didx[srt], lev[srt], dst[srt]
     upd_ptr = np.searchsorted(lev, np.arange(lv.num_levels + 1))
 
     segments = []
@@ -219,14 +188,13 @@ def build_plan(
     fwd_ptr = np.searchsorted(fwd_lev, np.arange(lv.num_levels + 1))
 
     # --- backward trisolve plan (U levels, computed descending) ------------
+    # ulev[j] = longest chain through row entries k > j; mirroring indices
+    # (j -> n-1-j) turns it into the standard src < dst longest-path problem
     indptr_t, indices_t, pos_t = csc_transpose_pattern(n, As.indptr, As.indices)
-    ulev = np.zeros(n, dtype=np.int64)
-    for j in range(n - 1, -1, -1):
-        s, e = indptr_t[j], indptr_t[j + 1]
-        ks = indices_t[s:e]
-        ks = ks[ks > j]
-        if len(ks):
-            ulev[j] = ulev[ks].max() + 1
+    rows_t = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr_t))
+    um = indices_t > rows_t
+    ulev = longest_path_levels(
+        n, n - 1 - indices_t[um].astype(np.int64), n - 1 - rows_t[um])[::-1].copy()
     nulev = int(ulev.max()) + 1 if n else 0
     u_start = indptr[:-1]
     u_end = diag_pos  # strictly-above-diagonal entries

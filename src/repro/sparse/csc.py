@@ -13,7 +13,47 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["CSC", "csc_from_coo", "csc_to_dense", "csc_transpose_pattern"]
+__all__ = ["CSC", "concat_ranges", "csc_from_coo", "csc_to_dense",
+           "csc_transpose_pattern", "pattern_digest"]
+
+
+def concat_ranges(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Vectorised concatenation of the half-open ranges [starts[i], ends[i]).
+
+    The workhorse of the host-side symbolic passes: gathering many CSC column
+    slices in one shot without a python loop.
+    """
+    counts = (ends - starts).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    out = np.ones(total, dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    nz = counts > 0
+    first = offsets[nz]
+    starts_nz = starts[nz].astype(np.int64)
+    counts_nz = counts[nz]
+    out[first] = starts_nz
+    out[first[1:]] -= (starts_nz + counts_nz)[:-1] - 1
+    return np.cumsum(out)
+
+
+def pattern_digest(*parts) -> str:
+    """Content hash of a sparsity pattern (or any tuple of arrays/strings/
+    scalars): the address of a cached symbolic plan."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, np.ndarray):
+            a = np.ascontiguousarray(p)
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        else:
+            h.update(repr(p).encode())
+        h.update(b"|")
+    return h.hexdigest()
 
 
 @dataclasses.dataclass

@@ -10,9 +10,23 @@ from repro.core import (
     level_stats,
     levelize,
     levelize_relaxed,
+    longest_path_levels,
     symbolic_fillin_gp,
 )
 from repro.sparse import circuit_jacobian, csc_from_coo, grid_laplacian
+
+
+def _levels_reference(n, src, dst):
+    """Sequential longest-path oracle (the pre-vectorization levelize loop)."""
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    ptr = np.searchsorted(dst, np.arange(n + 1))
+    levels = np.zeros(n, dtype=np.int64)
+    for k in range(n):
+        s, e = ptr[k], ptr[k + 1]
+        if e > s:
+            levels[k] = levels[src[s:e]].max() + 1
+    return levels
 
 
 def _edges(pair):
@@ -84,6 +98,42 @@ def test_paper_example_double_u():
     As = symbolic_fillin_gp(A)
     rel = _edges(dependencies_relaxed(As))
     assert (3, 5) in rel  # "look left" finds the double-U dependency 4->6
+
+
+def test_longest_path_levels_matches_reference(filled):
+    """The frontier-swept levelization equals the sequential oracle on real
+    dependency graphs (with duplicate edges from the two relaxed rules)."""
+    src, dst = dependencies_relaxed(filled)
+    np.testing.assert_array_equal(
+        longest_path_levels(filled.n, src, dst),
+        _levels_reference(filled.n, src, dst))
+
+
+def test_longest_path_levels_chain_fallback():
+    """A pure chain exceeds the frontier round cap and must fall through to
+    the sequential sweep — levels stay exact."""
+    n = 600
+    src = np.arange(n - 1, dtype=np.int64)
+    dst = src + 1
+    got = longest_path_levels(n, src, dst, round_cap=16)
+    np.testing.assert_array_equal(got, np.arange(n))
+
+
+def test_longest_path_levels_random_dags():
+    rng = np.random.default_rng(12)
+    for _ in range(10):
+        n = int(rng.integers(2, 120))
+        m = int(rng.integers(0, 4 * n))
+        a = rng.integers(0, n, size=m)
+        b = rng.integers(0, n, size=m)
+        src = np.minimum(a, b)
+        dst = np.maximum(a, b)
+        keep = src < dst
+        src, dst = src[keep], dst[keep]
+        for cap in (1, 4, 128):
+            np.testing.assert_array_equal(
+                longest_path_levels(n, src, dst, round_cap=cap),
+                _levels_reference(n, src, dst))
 
 
 def test_level_stats_shape(filled):

@@ -1,0 +1,290 @@
+"""Planner subsystem: SymbolicPlan artifact, content-addressed PlanCache,
+``GLU.from_plan``, cross-engine pattern equality, and the preprocessing
+acceptance contract (vectorized >= 5x faster than gp with identical output;
+re-construction on a known pattern does zero symbolic work)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.circuit import rc_grid_circuit, transient
+from repro.core import (
+    GLU,
+    PlanCache,
+    build_symbolic_plan,
+    compute_scaling,
+    levelize_relaxed,
+    plan_factorization,
+    plan_key,
+    set_default_plan_cache,
+    symbolic_fillin_etree,
+    symbolic_fillin_gp,
+    symbolic_fillin_vectorized,
+)
+from repro.sparse import CSC, circuit_jacobian, grid_laplacian, rc_ladder
+
+ENGINES = ["gp", "etree", "vectorized"]
+
+
+@pytest.fixture()
+def fresh_default_cache():
+    """Isolate the process-wide cache: tests in this module must not see (or
+    leave behind) plans from other tests."""
+    cache = PlanCache(capacity=8)
+    old = set_default_plan_cache(cache)
+    yield cache
+    set_default_plan_cache(old)
+
+
+def _revalued(A, factor=3.0):
+    """Same pattern, globally rescaled values: the MC64 assignment costs are
+    invariant under a global factor, so the matching (and hence the plan
+    key) is guaranteed unchanged while every value differs."""
+    return CSC(A.n, A.indptr, A.indices, np.asarray(A.data) * factor)
+
+
+# --------------------------------------------------------------------------
+# cache semantics
+# --------------------------------------------------------------------------
+
+def test_cache_hit_miss_semantics():
+    A = circuit_jacobian(220, avg_degree=4.5, seed=3)
+    cache = PlanCache(capacity=4)
+    p1, s1, hit1 = plan_factorization(A, cache=cache)
+    assert not hit1
+    assert cache.stats.misses == 1 and cache.stats.builds == 1
+    # same pattern, new values: the symbolic artifact is shared
+    p2, s2, hit2 = plan_factorization(_revalued(A), cache=cache)
+    assert hit2 and p2 is p1
+    assert cache.stats.hits == 1 and cache.stats.builds == 1
+    # different pattern: miss
+    B = circuit_jacobian(220, avg_degree=4.5, seed=4)
+    p3, _, hit3 = plan_factorization(B, cache=cache)
+    assert not hit3 and p3 is not p1
+    assert cache.stats.misses == 2 and cache.stats.builds == 2
+
+
+def test_cache_key_contract():
+    """Key = (pattern, matching, resolved ordering, resolved symbolic,
+    panel_threshold) — and nothing else (values don't enter)."""
+    A = circuit_jacobian(150, avg_degree=4.0, seed=5)
+    perm = compute_scaling(A, "scale").row_perm
+    base = plan_key(A.n, A.indptr, A.indices, perm, "mindeg", "gp", 16)
+    assert plan_key(A.n, A.indptr, A.indices, perm, "mindeg", "gp", 16) == base
+    # auto resolves to the same concrete methods at this size
+    assert plan_key(A.n, A.indptr, A.indices, perm, "auto", "auto", 16) == base
+    assert plan_key(A.n, A.indptr, A.indices, perm, "rcm", "gp", 16) != base
+    assert plan_key(A.n, A.indptr, A.indices, perm, "mindeg", "etree", 16) != base
+    assert plan_key(A.n, A.indptr, A.indices, perm, "mindeg", "gp", 8) != base
+    other = np.roll(perm, 1)
+    assert plan_key(A.n, A.indptr, A.indices, other, "mindeg", "gp", 16) != base
+
+
+def test_cache_lru_eviction():
+    mats = [circuit_jacobian(90, avg_degree=3.5, seed=s) for s in range(3)]
+    cache = PlanCache(capacity=2)
+    keys = []
+    for A in mats:
+        plan, _, _ = plan_factorization(A, cache=cache)
+        keys.append(plan.key)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert keys[0] not in cache and keys[1] in cache and keys[2] in cache
+    # evicted pattern rebuilds (miss), and pushes out the LRU entry (keys[1])
+    _, _, hit = plan_factorization(mats[0], cache=cache)
+    assert not hit and cache.stats.builds == 4
+    assert keys[1] not in cache
+    # touching keys[2] via get keeps it hot
+    _, _, hit = plan_factorization(mats[2], cache=cache)
+    assert hit
+
+
+def test_cache_disk_persistence(tmp_path):
+    A = circuit_jacobian(130, avg_degree=4.0, seed=9)
+    c1 = PlanCache(capacity=4, directory=str(tmp_path))
+    plan, _, _ = plan_factorization(A, cache=c1)
+    # a fresh cache (new process stand-in) warm-starts from disk
+    c2 = PlanCache(capacity=4, directory=str(tmp_path))
+    p2, _, hit = plan_factorization(A, cache=c2)
+    assert hit and c2.stats.disk_hits == 1 and c2.stats.builds == 0
+    assert np.array_equal(p2.pattern.indices, plan.pattern.indices)
+    assert np.array_equal(p2.fplan.didx, plan.fplan.didx)
+    # memory eviction keeps the disk copy: still a (disk) hit afterwards
+    for s in range(4):
+        plan_factorization(circuit_jacobian(60, avg_degree=3.0, seed=20 + s),
+                           cache=c2)
+    assert plan.key not in c2
+    _, _, hit = plan_factorization(A, cache=c2)
+    assert hit and c2.stats.disk_hits == 2
+
+
+# --------------------------------------------------------------------------
+# GLU.from_plan
+# --------------------------------------------------------------------------
+
+def test_from_plan_roundtrip():
+    A = circuit_jacobian(180, avg_degree=4.5, seed=11)
+    b = np.random.default_rng(1).normal(size=A.n)
+    g1 = GLU(A, plan_cache=None)
+    A2 = _revalued(A, factor=0.5)
+    # reference: full construction on the new values
+    x_ref = GLU(A2, plan_cache=None).factorize().solve(b)
+    g2 = GLU.from_plan(g1.symbolic_plan, A2)
+    assert g2.plan_from_cache
+    assert g2.symbolic_plan is g1.symbolic_plan
+    x = g2.factorize().solve(b)
+    np.testing.assert_allclose(x, x_ref, rtol=1e-12, atol=1e-13)
+    assert g2.residual(b, x) < 1e-9
+
+
+def test_from_plan_rejects_foreign_pattern():
+    A = circuit_jacobian(120, avg_degree=4.0, seed=13)
+    B = circuit_jacobian(120, avg_degree=4.0, seed=14)
+    plan = GLU(A, plan_cache=None).symbolic_plan
+    with pytest.raises(ValueError, match="pattern"):
+        GLU.from_plan(plan, B)
+
+
+def test_from_plan_rejects_changed_matching():
+    """Values that flip the MC64 matching invalidate the plan."""
+    A = circuit_jacobian(60, avg_degree=3.5, seed=15)
+    plan = GLU(A, plan_cache=None).symbolic_plan
+    data = np.asarray(A.data).copy()
+    # crush the diagonal, boost off-diagonals: the max-product matching of
+    # the new values must differ from the diagonally-dominant one
+    n = A.n
+    cols = np.repeat(np.arange(n), np.diff(A.indptr))
+    diag = A.indices == cols
+    data[diag] *= 1e-9
+    data[~diag] *= 1e3
+    A_flip = CSC(n, A.indptr, A.indices, data)
+    if np.array_equal(compute_scaling(A_flip, "scale").row_perm, plan.row_perm):
+        pytest.skip("matching did not flip for this instance")
+    with pytest.raises(ValueError, match="matching"):
+        GLU.from_plan(plan, A_flip)
+
+
+# --------------------------------------------------------------------------
+# cross-engine pattern equality
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kw", [
+    (circuit_jacobian, dict(n=200, avg_degree=4.5, seed=1)),
+    (circuit_jacobian, dict(n=240, avg_degree=4.0, pattern_asym=0.4, seed=2)),
+    (circuit_jacobian, dict(n=180, avg_degree=5.0, asym=0.5, n_rails=2, seed=3)),
+    (grid_laplacian, dict(nx=13, ny=11)),
+    (rc_ladder, dict(n=80)),
+])
+def test_vectorized_equals_gp(gen, kw):
+    """The vectorized engine is bit-identical to Gilbert-Peierls: pattern,
+    scatter map, and the levelization built on top."""
+    A = gen(**kw)
+    gp = symbolic_fillin_gp(A)
+    vec = symbolic_fillin_vectorized(A)
+    assert np.array_equal(gp.indptr, vec.indptr)
+    assert np.array_equal(gp.indices, vec.indices)
+    assert np.array_equal(gp.a_scatter, vec.a_scatter)
+    lg, lv = levelize_relaxed(gp), levelize_relaxed(vec)
+    assert np.array_equal(lg.levels, lv.levels)
+    assert np.array_equal(lg.order, lv.order)
+    assert np.array_equal(lg.level_ptr, lv.level_ptr)
+    # etree stays a superset of the exact fill
+    et = symbolic_fillin_etree(A)
+    gkeys = (np.repeat(np.arange(A.n, dtype=np.int64), np.diff(gp.indptr)) * A.n
+             + gp.indices.astype(np.int64))
+    ekeys = (np.repeat(np.arange(A.n, dtype=np.int64), np.diff(et.indptr)) * A.n
+             + et.indices.astype(np.int64))
+    assert np.isin(gkeys, ekeys).all()
+
+
+def test_cross_engine_through_facade():
+    """gp and vectorized agree through the full GLU pipeline (MC64 +
+    ordering applied); etree factors to the same solution on its superset."""
+    A = circuit_jacobian(260, avg_degree=4.5, n_rails=2, seed=21)
+    b = np.random.default_rng(3).normal(size=A.n)
+    ref = None
+    for engine in ENGINES:
+        g = GLU(A, symbolic=engine, plan_cache=None)
+        x = g.factorize().solve(b)
+        assert g.residual(b, x) < 1e-9, engine
+        if ref is None:
+            ref = x
+        else:
+            np.testing.assert_allclose(x, ref, rtol=1e-9, atol=1e-11)
+    g_gp = GLU(A, symbolic="gp", plan_cache=None)
+    g_vec = GLU(A, symbolic="vectorized", plan_cache=None)
+    assert np.array_equal(g_gp.pattern.indices, g_vec.pattern.indices)
+    assert np.array_equal(g_gp.levelization.levels, g_vec.levelization.levels)
+
+
+# --------------------------------------------------------------------------
+# acceptance: preprocessing speed + zero symbolic work on rebuild
+# --------------------------------------------------------------------------
+
+def test_vectorized_preprocessing_acceptance():
+    """On a circuit matrix with >= 20k filled nnz the vectorized engine must
+    produce the identical filled pattern + levelization >= 5x faster than
+    the per-column python DFS."""
+    A = circuit_jacobian(1200, avg_degree=5.0, seed=0)
+    scaling = compute_scaling(A, "scale")
+
+    def build(engine):
+        t0 = time.perf_counter()
+        plan = build_symbolic_plan(A.n, A.indptr, A.indices, scaling.row_perm,
+                                   ordering="mindeg", symbolic=engine)
+        return plan, time.perf_counter() - t0
+
+    plan_gp, _ = build("gp")
+    t_gp = plan_gp.build_seconds["symbolic"] + plan_gp.build_seconds["levelize"]
+    assert plan_gp.nnz_filled >= 20_000
+    # best of 2 for the fast engine: one-off allocator/import noise must not
+    # decide a ratio assertion
+    plan_vec, _ = build("vectorized")
+    t_vec = (plan_vec.build_seconds["symbolic"]
+             + plan_vec.build_seconds["levelize"])
+    plan_vec2, _ = build("vectorized")
+    t_vec = min(t_vec, plan_vec2.build_seconds["symbolic"]
+                + plan_vec2.build_seconds["levelize"])
+    assert np.array_equal(plan_gp.pattern.indptr, plan_vec.pattern.indptr)
+    assert np.array_equal(plan_gp.pattern.indices, plan_vec.pattern.indices)
+    assert np.array_equal(plan_gp.levelization.levels,
+                          plan_vec.levelization.levels)
+    speedup = t_gp / max(t_vec, 1e-9)
+    assert speedup >= 5.0, f"preprocessing speedup {speedup:.1f}x < 5x"
+
+
+def test_rebuild_same_pattern_is_pure_cache_hit():
+    """A second GLU construction on the same pattern (the transient
+    re-scaling rebuild shape: new values, same topology) performs zero
+    symbolic fill / dependency work — asserted via planner stats."""
+    A = circuit_jacobian(400, avg_degree=4.5, seed=31)
+    cache = PlanCache(capacity=4)
+    g1 = GLU(A, plan_cache=cache)
+    assert not g1.plan_from_cache
+    assert cache.stats.snapshot() == dict(hits=0, misses=1, evictions=0,
+                                          builds=1, disk_hits=0)
+    g2 = GLU(_revalued(A, factor=2.5), plan_cache=cache)
+    assert g2.plan_from_cache
+    assert g2.symbolic_plan is g1.symbolic_plan
+    # zero symbolic work: no new build happened anywhere in the planner
+    assert cache.stats.snapshot() == dict(hits=1, misses=1, evictions=0,
+                                          builds=1, disk_hits=0)
+    # and the two solvers agree numerically
+    b = np.random.default_rng(7).normal(size=A.n)
+    x2 = g2.factorize().solve(b)
+    assert g2.residual(b, x2) < 1e-9
+
+
+def test_transient_rescaling_rebuild_hits_plan_cache(fresh_default_cache):
+    """Tier-1 smoke for the end-to-end path: force the transient driver's
+    re-scaling rebuild (refine_tol=0 makes every refined solve report
+    non-convergence) and assert the rebuild was served by the plan cache."""
+    ckt = rc_grid_circuit(4, 4, with_diodes=True, seed=2)
+    res = transient(ckt, t_end=0.01, dt=0.005, refine=1, refine_tol=0.0)
+    assert res.n_rescalings >= 1
+    # setup build is the one miss; every re-scaling rebuild is a hit
+    assert res.plan_cache_hits >= res.n_rescalings
+    assert fresh_default_cache.stats.builds == 1
+    assert fresh_default_cache.stats.hits >= res.n_rescalings
+    assert np.isfinite(res.voltages).all()
+    assert res.max_residual < 1e-6
