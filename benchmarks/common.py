@@ -21,7 +21,13 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
     return min(ts), out
 
 
+# every row() call lands here too, so a harness run can dump the whole
+# table as machine-readable JSON (benchmarks.run --json out.json)
+RESULTS: list = []
+
+
 def row(name: str, us: float, derived: str = "") -> str:
+    RESULTS.append({"name": name, "us_per_call": float(us), "derived": derived})
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
     return line

@@ -3,6 +3,10 @@ scheduler (levelizer reuse from the paper's core).
 
   PYTHONPATH=src python examples/serve_lm.py
 """
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
 import numpy as np
 
 import jax

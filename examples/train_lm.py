@@ -6,6 +6,10 @@ Defaults train a ~14M-param qwen-family model for 200 steps on CPU
 
   PYTHONPATH=src python examples/train_lm.py
 """
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
 import sys
 
 from repro.launch.train import main as train_main

@@ -1,7 +1,9 @@
 from .mna import Circuit, rc_grid_circuit
 from .simulate import (
+    ACSweepResult,
     TransientResult,
     TransientSweepResult,
+    ac_sweep,
     perturbed_copies,
     transient,
     transient_sweep,
@@ -10,8 +12,10 @@ from .simulate import (
 __all__ = [
     "Circuit",
     "rc_grid_circuit",
+    "ACSweepResult",
     "TransientResult",
     "TransientSweepResult",
+    "ac_sweep",
     "perturbed_copies",
     "transient",
     "transient_sweep",

@@ -2,10 +2,16 @@
 
 Node 0 is ground and is eliminated.  Supported elements: resistors,
 capacitors (backward-Euler companion model), DC/time-varying current
-sources, and diodes (Newton companion model).  The sparsity pattern is
-fixed across time steps and Newton iterations — assembly produces a new
-value vector on the same pattern, which is exactly the contract
-``GLU.factorize(new_values)`` exposes (the paper's SPICE use case).
+sources, AC small-signal current sources, and diodes (Newton companion
+model).  The sparsity pattern is fixed across time steps and Newton
+iterations — assembly produces a new value vector on the same pattern,
+which is exactly the contract ``GLU.factorize(new_values)`` exposes (the
+paper's SPICE use case).
+
+``assemble_ac`` produces the AC small-signal systems ``A(w) = G + jwC``
+(complex128) for a whole frequency sweep on that same fixed pattern: one
+symbolic plan, one complex value vector per frequency point — the batched
+refactorization workload.
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ class Circuit:
         self.resistors: list[tuple[int, int, float]] = []
         self.capacitors: list[tuple[int, int, float]] = []
         self.isources: list[tuple[int, int, Callable[[float], float]]] = []
+        self.ac_isources: list[tuple[int, int, complex]] = []
         self.diodes: list[tuple[int, int, float, float]] = []
         self._pattern: Optional[CSC] = None
 
@@ -49,6 +56,12 @@ class Circuit:
         """Current flows from node a to node b through the source."""
         fn = i_fn if callable(i_fn) else (lambda t, v=float(i_fn): v)
         self.isources.append((a, b, fn))
+
+    def add_ac_current_source(self, a: int, b: int, phasor=1.0) -> None:
+        """Small-signal excitation for AC analysis: a current phasor
+        flowing from node a to node b.  Ignored by transient assembly
+        (AC sources are zero at the DC operating point by definition)."""
+        self.ac_isources.append((a, b, complex(phasor)))
 
     def add_diode(self, a: int, b: int, i_sat: float = 1e-12, v_t: float = 0.02585) -> None:
         self.diodes.append((a, b, i_sat, v_t))
@@ -101,6 +114,20 @@ class Circuit:
         self._d_stamp = quad_positions([(a, b) for a, b, *_ in self.diodes])
 
     # -- assembly --------------------------------------------------------------
+    @staticmethod
+    def _diode_vd(a: int, b: int, v: np.ndarray) -> float:
+        """Clipped diode junction voltage at iterate ``v`` (the clip window
+        keeps exp() finite during Newton transients)."""
+        va = v[a - 1] if a > 0 else 0.0
+        vb = v[b - 1] if b > 0 else 0.0
+        return float(np.clip(va - vb, -5.0, 0.8))
+
+    @staticmethod
+    def _diode_gd(vd: float, isat: float, vt: float) -> float:
+        """Companion-model conductance Gd = Is/Vt exp(vd/Vt) — shared by the
+        transient Newton stamps and the AC small-signal linearization."""
+        return isat / vt * np.exp(vd / vt)
+
     def assemble(self, v: np.ndarray, v_prev: np.ndarray, dt: float, t: float):
         """Values (CSC entry order) + rhs for one Newton iterate at time t.
 
@@ -136,10 +163,9 @@ class Circuit:
         if self.diodes:
             gd = np.empty(len(self.diodes))
             for e, (a, b, isat, vt) in enumerate(self.diodes):
-                vd = np.clip(vnode(a, v) - vnode(b, v), -5.0, 0.8)
-                expv = np.exp(vd / vt)
-                g = isat / vt * expv
-                i_d = isat * (expv - 1.0)
+                vd = self._diode_vd(a, b, v)
+                g = self._diode_gd(vd, isat, vt)
+                i_d = g * vt - isat      # = Is (exp(vd/Vt) - 1), one exp
                 gd[e] = g
                 ieq = i_d - g * vd
                 if a > 0:
@@ -155,6 +181,50 @@ class Circuit:
                 rhs[a - 1] -= i
             if b > 0:
                 rhs[b - 1] += i
+        return vals, rhs
+
+    def assemble_ac(self, v_op: np.ndarray, freqs):
+        """AC small-signal systems ``A(w) = G + jwC`` for a frequency sweep.
+
+        ``v_op`` is the DC operating point (ground excluded): resistors and
+        the diode companion conductances linearized there stamp ``G``,
+        capacitors stamp ``C`` (the physical farads, not the backward-Euler
+        ``C/dt``), and the AC current sources build the complex excitation.
+        Returns ``(vals, rhs)``: ``vals`` is (F, nnz) complex128 — one value
+        vector per frequency on the SAME pattern transient assembly uses —
+        and ``rhs`` is (F, n) complex128 (frequency-independent phasors,
+        broadcast per point).
+        """
+        pat = self.pattern()
+        omega = 2.0 * np.pi * np.atleast_1d(np.asarray(freqs, dtype=np.float64))
+        g_vals = np.zeros(pat.nnz, dtype=np.float64)
+        c_vals = np.zeros(pat.nnz, dtype=np.float64)
+
+        if self.resistors:
+            g = np.asarray([g for *_ab, g in self.resistors])
+            st = self._r_stamp
+            np.add.at(g_vals, st.rows, st.sign * g[st.elem])
+        if self.diodes:
+            # small-signal conductance at the operating point: the same
+            # companion-model Gd the transient Newton stamps use
+            gd = np.empty(len(self.diodes))
+            for e, (a, b, isat, vt) in enumerate(self.diodes):
+                gd[e] = self._diode_gd(self._diode_vd(a, b, v_op), isat, vt)
+            st = self._d_stamp
+            np.add.at(g_vals, st.rows, st.sign * gd[st.elem])
+        if self.capacitors:
+            c = np.asarray([c for *_ab, c in self.capacitors])
+            st = self._c_stamp
+            np.add.at(c_vals, st.rows, st.sign * c[st.elem])
+
+        vals = g_vals[None, :] + 1j * omega[:, None] * c_vals[None, :]
+        rhs1 = np.zeros(self.n, dtype=np.complex128)
+        for a, b, phasor in self.ac_isources:
+            if a > 0:
+                rhs1[a - 1] -= phasor
+            if b > 0:
+                rhs1[b - 1] += phasor
+        rhs = np.broadcast_to(rhs1, (len(omega), self.n)).copy()
         return vals, rhs
 
 

@@ -22,8 +22,8 @@ import numpy as np
 from ..core.api import GLU
 from .mna import Circuit
 
-__all__ = ["TransientResult", "TransientSweepResult", "transient",
-           "transient_sweep", "perturbed_copies"]
+__all__ = ["ACSweepResult", "TransientResult", "TransientSweepResult",
+           "ac_sweep", "transient", "transient_sweep", "perturbed_copies"]
 
 
 @dataclasses.dataclass
@@ -313,7 +313,129 @@ def transient_sweep(
 
 def A_mul(pat, vals: np.ndarray, x: np.ndarray) -> np.ndarray:
     """y = A @ x for values on the circuit pattern (host-side check)."""
-    y = np.zeros(pat.n)
+    y = np.zeros(pat.n, dtype=np.result_type(vals.dtype, x.dtype, np.float64))
     cols = np.repeat(np.arange(pat.n), np.diff(pat.indptr))
     np.add.at(y, pat.indices, vals * x[cols])
     return y
+
+
+# --------------------------------------------------------------------------
+# AC small-signal analysis
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ACSweepResult:
+    freqs: np.ndarray            # (F,) sweep frequencies in Hz
+    voltages: np.ndarray         # (F, n) complex node-voltage phasors
+    op_point: np.ndarray         # (n,) DC operating point the sweep linearized at
+    op_newton_iters: int         # Newton iterations spent finding it
+    n_batched_factorizations: int  # batched complex factorize+solve calls (1)
+    setup_seconds: float         # operating point + symbolic plan
+    solve_seconds: float         # the batched complex linear solve
+    max_backward_error: float    # worst componentwise berr over all freqs
+    plan_cache_hits: int = 0     # GLU constructions served by the plan cache
+
+
+def ac_sweep(
+    ckt: Circuit,
+    freqs,
+    newton_tol: float = 1e-9,
+    max_newton: int = 50,
+    ordering: str = "auto",
+    use_pallas: bool = False,
+    refine: int = 2,
+    refine_tol: Optional[float] = None,
+    static_pivot: Optional[float] = None,
+) -> ACSweepResult:
+    """AC small-signal frequency sweep: ``A(w) x(w) = b`` at every point.
+
+    The classic second half of SPICE: find the DC operating point with the
+    existing Newton loop (capacitors open, ``dt=0`` assembly), linearize
+    there, then factorize ``A(w) = G + jwC`` for ALL F frequency points in
+    lockstep — one complex128 symbolic plan, ONE batched
+    ``refactorize_solve`` over the (F, nnz) value matrix.  The sparsity
+    pattern never changes across frequencies, so the whole sweep is exactly
+    the "one plan, many value vectors" contract the batched
+    refactorization engine was built for.
+
+    Iterative refinement (default ``refine=2``) runs verbatim on complex
+    values — the componentwise backward error is written in terms of
+    ``|.|`` — and ``max_backward_error`` reports the worst frequency point
+    on the *original* (unscaled) systems.
+    """
+    import jax.numpy as jnp
+
+    from ..sparse.csc import CSC
+
+    freqs = np.atleast_1d(np.asarray(freqs, dtype=np.float64))
+    pat = ckt.pattern()
+    n = ckt.n
+
+    t0 = time.perf_counter()
+    # DC operating point: dt=0 assembly opens the capacitors; the AC
+    # sources are zero at the operating point by definition
+    v = np.zeros(n)
+    glu_dc = None
+    n_plan_hits = 0
+    op_iters = 0
+    for it in range(max_newton):
+        vals, rhs = ckt.assemble(v, v, 0.0, 0.0)
+        if glu_dc is None:
+            # the operating-point solves get the same robustness options as
+            # the AC phase — a bad op point would silently poison the
+            # linearization no matter how accurate the AC solves are
+            glu_dc = GLU(CSC(pat.n, pat.indptr, pat.indices, vals),
+                         ordering=ordering, dtype=jnp.float64,
+                         use_pallas=use_pallas, refine=refine,
+                         refine_tol=refine_tol, static_pivot=static_pivot)
+            n_plan_hits += int(glu_dc.plan_from_cache)
+        glu_dc.factorize(vals)
+        v_new = glu_dc.solve(rhs)
+        dv = np.abs(v_new - v).max()
+        v = v_new
+        op_iters = it + 1
+        if dv < newton_tol:
+            break
+
+    # one complex plan for the whole sweep (MC64 matches/scales on |A(w0)|)
+    vals_ac, rhs_ac = ckt.assemble_ac(v, freqs)
+    glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals_ac[0]),
+              ordering=ordering, dtype=jnp.complex128,
+              use_pallas=use_pallas, refine=refine, refine_tol=refine_tol,
+              static_pivot=static_pivot)
+    n_plan_hits += int(glu.plan_from_cache)
+    setup_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    x = glu.refactorize_solve(vals_ac, rhs_ac)
+    solve_s = time.perf_counter() - t0
+
+    # componentwise backward error on the original systems, all F points in
+    # two vectorized scatter-add SpMV passes (pattern indices built once)
+    F = len(freqs)
+    rows = np.broadcast_to(pat.indices, (F, len(pat.indices)))
+    cols = np.repeat(np.arange(pat.n), np.diff(pat.indptr))
+    batch = np.arange(F)[:, None]
+
+    def spmv_all(vmat, xmat):
+        y = np.zeros((F, n), dtype=np.result_type(vmat.dtype, xmat.dtype))
+        np.add.at(y, (batch, rows), vmat * xmat[:, cols])
+        return y
+
+    r = spmv_all(vals_ac, x) - rhs_ac
+    denom = spmv_all(np.abs(vals_ac), np.abs(x)) + np.abs(rhs_ac)
+    max_berr = float(np.where(denom > 0,
+                              np.abs(r) / np.where(denom > 0, denom, 1.0),
+                              np.where(np.abs(r) > 0, np.inf, 0.0)).max())
+
+    return ACSweepResult(
+        freqs=freqs,
+        voltages=x,
+        op_point=v,
+        op_newton_iters=op_iters,
+        n_batched_factorizations=1,
+        setup_seconds=setup_s,
+        solve_seconds=solve_s,
+        max_backward_error=max_berr,
+        plan_cache_hits=n_plan_hits,
+    )

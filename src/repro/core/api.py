@@ -30,6 +30,7 @@ scaled system is the same test on the original one.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -46,7 +47,30 @@ from .planner import (
 )
 from .triangular import JaxTriangularSolver
 
-__all__ = ["GLU"]
+__all__ = ["GLU", "resolve_value_dtype"]
+
+
+def resolve_value_dtype(dtype) -> np.dtype:
+    """Resolve the *effective* value dtype JAX will actually use.
+
+    Without 64-bit mode (``JAX_ENABLE_X64`` / ``jax.config.update
+    ("jax_enable_x64", True)``) JAX silently truncates float64 -> float32
+    and complex128 -> complex64.  Silent truncation on the solve path is a
+    correctness bug (observed: residual 4.5e-7 on a float64 request), so a
+    truncated request raises instead of warning-and-degrading.
+    """
+    requested = np.dtype(dtype)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        effective = jnp.empty(0, dtype=dtype).dtype
+    if np.dtype(effective) != requested:
+        raise ValueError(
+            f"requested value dtype {requested} would be silently truncated "
+            f"to {effective} because JAX 64-bit mode is disabled; set "
+            f"JAX_ENABLE_X64=1 (or jax.config.update('jax_enable_x64', "
+            f"True)) before importing jax, or request dtype={effective} "
+            f"explicitly")
+    return requested
 
 
 class GLU:
@@ -157,6 +181,9 @@ class GLU:
         mode_override: Optional[str],
         interpret: bool,
     ) -> None:
+        # resolve the effective dtype ONCE; a float64/complex128 request
+        # without x64 enabled raises here instead of silently degrading
+        dtype = resolve_value_dtype(dtype)
         self.n = A.n
         self.symbolic_plan = plan
         self.plan_from_cache = bool(from_cache)
@@ -173,7 +200,9 @@ class GLU:
         self._inv_row = plan.inv_row
         # original-entry-order -> permuted-entry-order map (for refactorize)
         self._data_perm = plan.data_perm
-        scaled = np.asarray(A.data, dtype=np.float64) * self._scale_data
+        # no float64 hard-cast: A.data may be complex (AC analysis); the
+        # real Dr/Dc scale factors preserve the value dtype kind
+        scaled = np.asarray(A.data) * self._scale_data
         self._A_perm = CSC(A.n, plan.perm_indptr, plan.perm_indices,
                            scaled[self._data_perm])
         # scaled-A SpMV layout (permuted pattern) for iterative refinement
@@ -213,8 +242,7 @@ class GLU:
         elif self._scale_identity:
             data = np.asarray(a_data)[self._data_perm]
         else:
-            data = (np.asarray(a_data, dtype=np.float64)
-                    * self._scale_data)[self._data_perm]
+            data = (np.asarray(a_data) * self._scale_data)[self._data_perm]
         self._a_vals = jnp.asarray(data, dtype=self.dtype)
         self._a_abs = None                     # lazily built on refined solve
         self._vals = self._factorizer.factorize(self._a_vals)
@@ -240,7 +268,7 @@ class GLU:
                     " or call factorize() to refactorize single-matrix first")
             self.factorize()
         k = self.refine_default if refine is None else int(refine)
-        bp = (np.asarray(b, dtype=np.float64) * self.Dr)[self._inv_row]
+        bp = (np.asarray(b) * self.Dr)[self._inv_row]
         if k > 0:
             if self._a_abs is None:
                 self._a_abs = jnp.abs(self._a_vals)
@@ -263,7 +291,7 @@ class GLU:
         original CSC entry order (the Monte-Carlo / parameter-sweep
         refactorization contract: one symbolic plan, many value vectors).
         The single-matrix factor cache is invalidated."""
-        data = np.asarray(a_data_batch, dtype=np.float64)
+        data = np.asarray(a_data_batch)
         if data.ndim != 2:
             raise ValueError(f"expected (B, nnz) values, got shape {data.shape}")
         if self._scale_identity:
@@ -290,8 +318,7 @@ class GLU:
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
         k = self.refine_default if refine is None else int(refine)
-        bp = (np.asarray(b_batch, dtype=np.float64)
-              * self.Dr[None, :])[:, self._inv_row]
+        bp = (np.asarray(b_batch) * self.Dr[None, :])[:, self._inv_row]
         if k > 0:
             if self._a_abs_batch is None:
                 self._a_abs_batch = jnp.abs(self._a_vals_batch)
@@ -424,5 +451,5 @@ class GLU:
 
     def residual(self, b, x) -> float:
         """||Ax - b||_inf / ||b||_inf on the original system."""
-        r = self._A_scipy @ np.asarray(x, dtype=np.float64) - np.asarray(b)
+        r = self._A_scipy @ np.asarray(x) - np.asarray(b)
         return float(np.abs(r).max() / (np.abs(b).max() + 1e-300))

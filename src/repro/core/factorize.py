@@ -32,10 +32,16 @@ __all__ = ["factorize_numpy", "leftlooking_numpy", "JaxFactorizer", "split_lu"]
 # Host oracles (verbatim paper algorithms)
 # --------------------------------------------------------------------------
 
+def _oracle_dtype(vals) -> np.dtype:
+    """Working dtype of the host oracles: the input's dtype promoted to at
+    least 64-bit precision (float64 for real, complex128 for complex)."""
+    return np.result_type(np.asarray(vals).dtype, np.float64)
+
+
 def factorize_numpy(As: FilledPattern, vals: np.ndarray) -> np.ndarray:
     """Paper Algorithm 2: hybrid column right-looking LU (sequential oracle)."""
     n, indptr, indices = As.n, As.indptr, As.indices
-    vals = np.array(vals, dtype=np.float64, copy=True)
+    vals = np.array(vals, dtype=_oracle_dtype(vals), copy=True)
     for j in range(n):
         s, e = int(indptr[j]), int(indptr[j + 1])
         rows = indices[s:e]
@@ -69,7 +75,7 @@ def factorize_numpy_fast(As: FilledPattern, vals: np.ndarray) -> np.ndarray:
     subcolumns of j directly (used by larger tests/benchmarks)."""
     n, indptr, indices = As.n, As.indptr, As.indices
     indptr_t, indices_t, pos_t = _row_major_view(As)
-    vals = np.array(vals, dtype=np.float64, copy=True)
+    vals = np.array(vals, dtype=_oracle_dtype(vals), copy=True)
     for j in range(n):
         s, e = int(indptr[j]), int(indptr[j + 1])
         rows = indices[s:e]
@@ -93,7 +99,7 @@ def factorize_numpy_fast(As: FilledPattern, vals: np.ndarray) -> np.ndarray:
 def leftlooking_numpy(As: FilledPattern, vals: np.ndarray) -> np.ndarray:
     """Paper Algorithm 1: Gilbert-Peierls left-looking LU (baseline)."""
     n, indptr, indices = As.n, As.indptr, As.indices
-    vals = np.array(vals, dtype=np.float64, copy=True)
+    vals = np.array(vals, dtype=_oracle_dtype(vals), copy=True)
     for j in range(n):
         s, e = int(indptr[j]), int(indptr[j + 1])
         rows = indices[s:e]
@@ -368,6 +374,11 @@ class JaxFactorizer:
     ):
         self.plan = plan
         self.dtype = dtype
+        # Pallas TPU kernels take no complex operands: complex SEGMENTED/
+        # PANEL levels (and the dense tail) route through the equivalent
+        # flat XLA path instead
+        if use_pallas and np.issubdtype(np.dtype(dtype), np.complexfloating):
+            use_pallas = False
         self.use_pallas = use_pallas
         self.interpret = interpret
         self._a_scatter = jnp.asarray(plan.a_scatter, dtype=jnp.int32)

@@ -80,7 +80,9 @@ def max_product_matching(A: CSC):
     """
     n = A.n
     indptr, indices = A.indptr, A.indices
-    absval = np.abs(np.asarray(A.data, dtype=np.float64))
+    # Duff-Koster is defined on entry magnitudes: take |a_ij| BEFORE any
+    # dtype cast, so complex matrices (AC analysis) match on |G + jwC|
+    absval = np.abs(np.asarray(A.data)).astype(np.float64)
     colmax = np.zeros(n)
     np.maximum.at(colmax, np.repeat(np.arange(n), np.diff(indptr)), absval)
     if (colmax == 0).any():

@@ -57,9 +57,11 @@ class FilledPattern:
         return int(self.indptr[-1])
 
     def filled_csc(self, A: CSC) -> CSC:
-        """Scatter A's values into the filled pattern (zeros elsewhere)."""
-        vals = np.zeros(self.nnz, dtype=np.float64)
-        vals[self.a_scatter] = np.asarray(A.data, dtype=np.float64)
+        """Scatter A's values into the filled pattern (zeros elsewhere),
+        preserving the (promoted) value dtype — complex stays complex."""
+        data = np.asarray(A.data)
+        vals = np.zeros(self.nnz, dtype=np.result_type(data.dtype, np.float64))
+        vals[self.a_scatter] = data
         return CSC(self.n, self.indptr, self.indices, vals)
 
 

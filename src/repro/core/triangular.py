@@ -30,10 +30,12 @@ __all__ = ["JaxTriangularSolver", "trisolve_numpy"]
 def trisolve_numpy(plan: FactorizePlan, vals: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Sequential oracle: unit-lower forward then upper backward solve."""
     n, indptr, indices = plan.n, plan.indptr, plan.indices
-    vals = np.asarray(vals, dtype=np.float64)
-    x = np.array(b, dtype=np.float64, copy=True)
+    vals = np.asarray(vals)
+    dtype = np.result_type(vals.dtype, np.asarray(b).dtype, np.float64)
+    vals = vals.astype(dtype, copy=False)
+    x = np.array(b, dtype=dtype, copy=True)
     for j in range(n):
-        s, e = int(indptr[j]), int(indptr[j + 1])
+        e = int(indptr[j + 1])
         dp = int(plan.diag_idx[j])
         rows = indices[dp + 1 : e]
         x[rows] -= vals[dp + 1 : e] * x[j]
@@ -182,7 +184,10 @@ class JaxTriangularSolver:
         self._bwd_groups = build_groups(bwd_items)
 
     def solve(self, vals: jnp.ndarray, b) -> jnp.ndarray:
-        x = jnp.asarray(b, dtype=vals.dtype)
+        # defensive copy: the jitted group steps donate the rhs buffer, and
+        # ``jnp.asarray`` is a no-op on a JAX array already of vals.dtype —
+        # without the copy the *caller's* array would be deleted
+        x = jnp.array(b, dtype=vals.dtype, copy=True)
         for g in self._fwd_groups:
             x = _fwd_group(vals, x, *g)
         for g in self._bwd_groups:
@@ -193,7 +198,8 @@ class JaxTriangularSolver:
         """Row i of the result solves with factor values ``vals_batch[i]``
         and right-hand side ``b_batch[i]`` — B solves in lockstep."""
         vals = jnp.asarray(vals_batch)
-        x = jnp.asarray(b_batch, dtype=vals.dtype)
+        # defensive copy — same donation hazard as :meth:`solve`
+        x = jnp.array(b_batch, dtype=vals.dtype, copy=True)
         if vals.ndim != 2 or x.ndim != 2 or vals.shape[0] != x.shape[0]:
             raise ValueError(
                 f"expected (B, nnz) values and (B, n) rhs, got "
@@ -216,7 +222,7 @@ class JaxTriangularSolver:
         ``converged``."""
         n = self.plan.n
         b = jnp.asarray(b, dtype=vals.dtype)
-        x = self.solve(vals, jnp.array(b))  # copy: solve donates its rhs
+        x = self.solve(vals, b)             # solve makes its own rhs copy
         iters = 0
         r, berr = _residual_berr(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
         while float(berr) > tol and iters < max_iter:
@@ -235,7 +241,7 @@ class JaxTriangularSolver:
         are (B,) arrays."""
         n = self.plan.n
         b = jnp.asarray(b, dtype=vals.dtype)
-        x = self.solve_batched(vals, jnp.array(b))
+        x = self.solve_batched(vals, b)     # solve makes its own rhs copy
         B = x.shape[0]
         iters = np.zeros(B, dtype=np.int64)
         r, berr = _residual_berr_batched(a_rows, a_cols, a_vals, a_abs, x, b,

@@ -112,14 +112,18 @@ def spmv(row_ids, colidx, a_vals, x, *, n_rows: int):
 
 def _perturb_diags_body(vals, diag_idx, tau):
     """Static pivot perturbation (SuperLU_DIST-style): any diagonal with
-    ``|d| < tau`` is replaced by ``sign(d) * tau`` (zeros bump positive)
-    instead of poisoning the factors with inf/NaN.  ``diag_idx`` is padded
-    with ``nnz`` (one past the value array); padded slots are masked out
-    explicitly so they contribute neither bumps nor counts whatever tau is."""
+    ``|d| < tau`` is replaced by ``tau * d/|d|`` — magnitude tau, phase
+    preserved (for real values that is ``sign(d) * tau``; exact zeros bump
+    to ``+tau``) — instead of poisoning the factors with inf/NaN.
+    ``diag_idx`` is padded with ``nnz`` (one past the value array); padded
+    slots are masked out explicitly so they contribute neither bumps nor
+    counts whatever tau is."""
     valid = diag_idx < vals.shape[-1]
     d = vals.at[diag_idx].get(mode="fill", fill_value=1.0)
-    tiny = (jnp.abs(d) < tau) & valid
-    bumped = jnp.where(tiny, jnp.where(d < 0, -tau, tau).astype(vals.dtype), d)
+    mag = jnp.abs(d)
+    tiny = (mag < tau) & valid
+    phase = jnp.where(mag > 0, d / jnp.where(mag > 0, mag, 1.0), 1.0)
+    bumped = jnp.where(tiny, (phase * tau).astype(vals.dtype), d)
     vals = vals.at[diag_idx].set(bumped, mode="drop")
     return vals, jnp.sum(tiny, dtype=jnp.int32)
 

@@ -1,6 +1,7 @@
 from .csc import CSC, csc_from_coo, csc_to_dense, csc_transpose_pattern
 from .gen import (
     SUITES,
+    ac_jacobian,
     asic_like,
     circuit_jacobian,
     grid_laplacian,
@@ -16,6 +17,7 @@ __all__ = [
     "csc_to_dense",
     "csc_transpose_pattern",
     "SUITES",
+    "ac_jacobian",
     "asic_like",
     "circuit_jacobian",
     "grid_laplacian",

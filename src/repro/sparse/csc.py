@@ -62,7 +62,7 @@ class CSC:
 
     ``indptr``:  (n+1,) int32 — column start offsets.
     ``indices``: (nnz,) int32 — row indices, sorted ascending within a column.
-    ``data``:    (nnz,) float — numeric values (numpy or jax array).
+    ``data``:    (nnz,) float or complex — numeric values (numpy or jax array).
     """
 
     n: int
@@ -123,7 +123,11 @@ class CSC:
 def csc_from_coo(n: int, rows, cols, vals, sum_duplicates: bool = True) -> CSC:
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
-    vals = np.asarray(vals, dtype=np.float64)
+    # preserve floating/complex value dtypes (AC matrices are complex128);
+    # anything else (ints, python lists of floats) becomes float64
+    vals = np.asarray(vals)
+    if not np.issubdtype(vals.dtype, np.inexact):
+        vals = vals.astype(np.float64)
     order = np.lexsort((rows, cols))
     rows, cols, vals = rows[order], cols[order], vals[order]
     if sum_duplicates and len(rows):
@@ -141,7 +145,8 @@ def csc_from_coo(n: int, rows, cols, vals, sum_duplicates: bool = True) -> CSC:
 
 
 def csc_to_dense(A: CSC) -> np.ndarray:
-    out = np.zeros((A.n, A.n), dtype=np.float64)
+    out = np.zeros((A.n, A.n),
+                   dtype=np.result_type(np.asarray(A.data).dtype, np.float64))
     for j in range(A.n):
         idx, v = A.col(j)
         out[idx, j] = np.asarray(v)

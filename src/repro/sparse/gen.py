@@ -25,6 +25,7 @@ __all__ = [
     "rc_ladder",
     "circuit_jacobian",
     "ill_conditioned_jacobian",
+    "ac_jacobian",
     "asic_like",
     "SUITES",
     "make_suite_matrix",
@@ -157,6 +158,34 @@ def ill_conditioned_jacobian(
             colmax = np.abs(A.col(int(j))[1]).max()
             A.data[k] = np.sign(A.data[k]) * 1e-14 * colmax
     return A
+
+
+def ac_jacobian(
+    n: int,
+    omega: float = 1e3,
+    avg_degree: float = 4.0,
+    cap_coupling: float = 0.25,
+    seed: int = 0,
+) -> CSC:
+    """Complex AC small-signal matrix ``G + jwC`` on a circuit pattern.
+
+    ``G`` is a :func:`circuit_jacobian`; ``C`` puts ground capacitors on
+    every diagonal and couples a ``cap_coupling`` fraction of the
+    off-diagonal entries (symmetrically signed, like real MNA cap stamps).
+    The result is complex128 with the exact sparsity pattern of ``G`` —
+    one real matrix and its whole frequency sweep share a symbolic plan.
+    """
+    G = circuit_jacobian(n, avg_degree=avg_degree, seed=seed)
+    rng = np.random.default_rng(seed + 3)
+    c = np.zeros(G.nnz)
+    cols = np.repeat(np.arange(G.n), np.diff(G.indptr))
+    off = G.indices != cols
+    pick = off & (rng.uniform(size=G.nnz) < cap_coupling)
+    c[pick] = -rng.uniform(1e-4, 1e-3, size=int(pick.sum()))
+    diag = np.zeros(G.n)
+    np.add.at(diag, G.indices[pick], -c[pick])
+    c[G.diag_value_indices()] = diag + rng.uniform(1e-4, 1e-3, size=G.n)
+    return CSC(G.n, G.indptr, G.indices, np.asarray(G.data) + 1j * omega * c)
 
 
 def asic_like(n: int, seed: int = 0) -> CSC:

@@ -1,0 +1,169 @@
+"""AC small-signal analysis: the complex-valued LU workload.
+
+``ac_sweep`` factorizes A(w) = G + jwC at every frequency point of a sweep
+in lockstep on ONE symbolic plan (complex128, batched).  Contracts:
+
+* every frequency point matches a per-frequency scipy complex oracle to a
+  componentwise backward error <= 1e-10,
+* complex batched factorization == per-matrix single factorization,
+* the static-pivot bump rule generalizes to ``tau * d/|d|`` on complex,
+* MC64 matching/scaling of a complex matrix equals that of ``|A|``.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+import jax.numpy as jnp
+
+from repro.circuit import Circuit, ac_sweep, rc_grid_circuit
+from repro.core import GLU, max_product_matching
+from repro.core.planner import PlanCache, set_default_plan_cache
+from repro.kernels import ops as kops
+from repro.sparse import ac_jacobian
+from repro.sparse.csc import CSC
+
+
+def _berr(A_scipy, x, b) -> float:
+    """Componentwise backward error max_i |r_i| / (|A||x| + |b|)_i."""
+    r = A_scipy @ x - b
+    denom = abs(A_scipy) @ np.abs(x) + np.abs(b)
+    return float(np.where(denom > 0, np.abs(r) / np.where(denom > 0, denom, 1),
+                          np.where(np.abs(r) > 0, np.inf, 0.0)).max())
+
+
+def test_ac_rc_lowpass_analytic():
+    """Single-node RC: V(w) = 1 / (G + jwC), exactly."""
+    ckt = Circuit(2)
+    ckt.add_resistor(1, 0, 2.0)            # G = 0.5 S
+    ckt.add_capacitor(1, 0, 1e-3)
+    ckt.add_ac_current_source(0, 1, 1.0)   # 1A phasor into node 1
+    freqs = np.logspace(0, 4, 9)
+    res = ac_sweep(ckt, freqs)
+    v_exact = 1.0 / (0.5 + 1j * 2 * np.pi * freqs * 1e-3)
+    assert res.voltages.dtype == np.complex128
+    np.testing.assert_allclose(res.voltages[:, 0], v_exact, rtol=1e-12)
+
+
+def test_ac_sweep_matches_scipy_oracle():
+    """Sweep on an RC/diode grid vs per-frequency scipy splu, and the
+    one-plan contract: a single batched complex factorize+solve covers the
+    whole sweep, and the symbolic plan is shared with the DC build."""
+    cache = PlanCache()
+    old = set_default_plan_cache(cache)
+    try:
+        ckt = rc_grid_circuit(4, 4, with_diodes=True, seed=2)
+        ckt.add_ac_current_source(1, 0, 1.0)
+        freqs = np.logspace(0, 5, 7)
+        res = ac_sweep(ckt, freqs)
+        assert res.n_batched_factorizations == 1
+        assert res.max_backward_error <= 1e-10
+        pat = ckt.pattern()
+        vals, rhs = ckt.assemble_ac(res.op_point, freqs)
+        assert vals.dtype == np.complex128 and vals.shape == (7, pat.nnz)
+        for k in range(len(freqs)):
+            A = sp.csc_matrix((vals[k], pat.indices, pat.indptr),
+                              shape=(pat.n, pat.n))
+            x_ref = spla.splu(A).solve(rhs[k])
+            np.testing.assert_allclose(res.voltages[k], x_ref,
+                                       rtol=1e-9, atol=1e-12)
+            assert _berr(A, res.voltages[k], rhs[k]) <= 1e-10
+        # DC op-point build + AC complex build share the pattern: at most
+        # two symbolic builds for the whole sweep, and a repeat sweep does
+        # zero additional symbolic work
+        assert cache.stats.builds <= 2
+        builds_before = cache.stats.builds
+        res2 = ac_sweep(ckt, freqs)
+        assert cache.stats.builds == builds_before
+        assert res2.plan_cache_hits == 2
+        np.testing.assert_allclose(res2.voltages, res.voltages)
+    finally:
+        set_default_plan_cache(old)
+
+
+def test_complex_batched_equals_single():
+    A = ac_jacobian(150, omega=2e3, seed=4)
+    assert np.iscomplexobj(A.data)
+    rng = np.random.default_rng(0)
+    B = 4
+    batch = np.asarray(A.data)[None, :] * (
+        1.0 + 0.05 * rng.uniform(-1, 1, size=(B, A.nnz)))
+    b = rng.normal(size=(B, A.n)) + 1j * rng.normal(size=(B, A.n))
+    glu = GLU(A, dtype=jnp.complex128)
+    xb = glu.factorize_batched(batch).solve_batched(b)
+    assert xb.dtype == np.complex128
+    for k in range(B):
+        Ak = CSC(A.n, A.indptr, A.indices, batch[k])
+        xk = GLU(Ak, dtype=jnp.complex128).factorize().solve(b[k])
+        np.testing.assert_allclose(xb[k], xk, rtol=1e-12, atol=1e-14)
+        assert _berr(Ak.to_scipy(), xb[k], b[k]) <= 1e-12
+
+
+def test_complex_static_pivot_bump_rule():
+    """|d| < tau is bumped to tau * d/|d| — magnitude tau, phase kept;
+    exact zeros bump to +tau, real negatives to -tau."""
+    d_tiny = 1e-14 * np.exp(1j * 0.7)
+    vals = np.array([3.0 + 4.0j, d_tiny, 0.0, -1e-13, 2.0 - 1.0j],
+                    dtype=np.complex128)
+    diag_idx = jnp.asarray(np.array([0, 1, 2, 3, 5], dtype=np.int32))
+    tau = 1e-10
+    out, n_bumped = kops.perturb_diags(jnp.asarray(vals), diag_idx,
+                                       jnp.asarray(tau))
+    out = np.asarray(out)
+    assert int(n_bumped) == 3
+    np.testing.assert_allclose(out[0], vals[0])          # healthy: untouched
+    np.testing.assert_allclose(out[1], tau * np.exp(1j * 0.7), rtol=1e-12)
+    np.testing.assert_allclose(out[2], tau)              # zero bumps positive
+    np.testing.assert_allclose(out[3], -tau)             # real sign preserved
+    np.testing.assert_allclose(out[4], vals[4])
+
+
+def test_complex_static_pivot_end_to_end():
+    """A complex matrix with one crushed diagonal factorizes finitely under
+    the guard and reports the bump."""
+    A = ac_jacobian(80, omega=1e3, seed=1)
+    data = np.asarray(A.data).copy()
+    # crush column 0's diagonal: with identity permutations it is consumed
+    # at level 0 before any update can restore its magnitude
+    k = A.value_index(0, 0)
+    data[k] = data[k] / abs(data[k]) * 1e-18
+    Ac = CSC(A.n, A.indptr, A.indices, data)
+    glu = GLU(Ac, dtype=jnp.complex128, mc64="none", ordering="none",
+              static_pivot=1e-12)
+    glu.factorize()
+    assert np.isfinite(np.asarray(glu.factorized_values())).all()
+    assert glu.solve_info["n_perturbed"] >= 1
+
+
+def test_mc64_matching_on_magnitudes():
+    """Duff-Koster on a complex matrix is defined on |a_ij|: the matching
+    and the dual scalings must equal those of the magnitude matrix."""
+    A = ac_jacobian(120, omega=5e3, seed=6)
+    rp_c, Dr_c, Dc_c = max_product_matching(A)
+    A_abs = CSC(A.n, A.indptr, A.indices, np.abs(np.asarray(A.data)))
+    rp_a, Dr_a, Dc_a = max_product_matching(A_abs)
+    np.testing.assert_array_equal(rp_c, rp_a)
+    np.testing.assert_allclose(Dr_c, Dr_a)
+    np.testing.assert_allclose(Dc_c, Dc_a)
+    # scaled magnitudes obey the Duff-Koster bound with matched 1s
+    scaled = np.abs(np.asarray(A.data)) * Dr_c[A.indices] * Dc_c[
+        np.repeat(np.arange(A.n), np.diff(A.indptr))]
+    assert scaled.max() <= 1.0 + 1e-12
+
+
+def test_ac_sweep_refinement_reports_complex_berr():
+    ckt = rc_grid_circuit(3, 3, with_diodes=False, seed=0)
+    ckt.add_ac_current_source(1, 0, 0.5 + 0.5j)
+    res = ac_sweep(ckt, [10.0, 1e3], refine=2)
+    assert res.max_backward_error <= 1e-12
+    assert res.voltages.shape == (2, ckt.n)
+
+
+@pytest.mark.slow
+def test_ac_sweep_large_grid():
+    ckt = rc_grid_circuit(8, 8, with_diodes=True, seed=3)
+    ckt.add_ac_current_source(5, 0, 1.0)
+    res = ac_sweep(ckt, np.logspace(0, 6, 25))
+    assert res.max_backward_error <= 1e-10
+    mag = np.abs(res.voltages[:, 4])
+    assert mag[0] > mag[-1]          # low-pass grid

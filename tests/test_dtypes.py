@@ -1,0 +1,184 @@
+"""Value-dtype contracts and regression tests for two confirmed bugs.
+
+1. Silent float64 -> float32 truncation: without ``JAX_ENABLE_X64`` a plain
+   ``GLU(A)`` used to emit a UserWarning and silently produce float32
+   factors (observed residual 4.5e-7 on a float64 request).  The effective
+   dtype is now resolved once at setup and a truncated request raises.
+2. rhs donation hazard: the jitted triangular-solve group steps donate the
+   rhs buffer; when a caller passed a JAX array already of ``vals.dtype``,
+   ``jnp.asarray`` was a no-op and the *caller's* array was deleted
+   (``RuntimeError: Array has been deleted`` on the next read).
+3. Host oracles used to hard-cast values to float64, destroying complex
+   inputs; they now preserve the (promoted) input dtype.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+import jax.numpy as jnp
+
+from repro.core import (
+    JaxFactorizer,
+    JaxTriangularSolver,
+    build_plan,
+    factorize_numpy,
+    factorize_numpy_fast,
+    leftlooking_numpy,
+    resolve_value_dtype,
+    symbolic_fillin_gp,
+    trisolve_numpy,
+)
+from repro.sparse import ac_jacobian, circuit_jacobian
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Runs in a subprocess WITHOUT JAX_ENABLE_X64 — the plain-library-use
+# environment where the silent float32 truncation was observed.
+_NO_X64_SCRIPT = """
+import numpy as np
+import jax.numpy as jnp
+from repro.core import GLU
+from repro.sparse import circuit_jacobian
+
+A = circuit_jacobian(80, avg_degree=4.0, seed=0)
+b = np.random.default_rng(0).normal(size=A.n)
+
+# the float64 default must refuse to silently degrade
+try:
+    GLU(A)
+except ValueError as e:
+    assert "truncated" in str(e) and "JAX_ENABLE_X64" in str(e), str(e)
+    print("RAISED-OK")
+else:
+    raise SystemExit("GLU(A) did not raise on a truncated float64 request")
+
+# complex128 is truncated the same way
+try:
+    GLU(A, dtype=jnp.complex128)
+except ValueError:
+    print("COMPLEX-RAISED-OK")
+else:
+    raise SystemExit("GLU did not raise on a truncated complex128 request")
+
+# an explicit float32 request is honored (the host-side Dr/Dc unscaling
+# is float64, so the returned x is float64 computed from float32 factors)
+glu = GLU(A, dtype=jnp.float32)
+assert glu.dtype == np.dtype("float32")
+x = glu.factorize().solve(b)
+assert np.asarray(glu.factorized_values()).dtype == np.float32
+assert glu.residual(b, x) < 1e-4
+print("FLOAT32-OK")
+"""
+
+
+def test_truncated_dtype_raises_without_x64():
+    env = dict(os.environ)
+    env.pop("JAX_ENABLE_X64", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", _NO_X64_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "RAISED-OK" in out.stdout
+    assert "COMPLEX-RAISED-OK" in out.stdout
+    assert "FLOAT32-OK" in out.stdout
+
+
+def test_resolve_value_dtype_with_x64():
+    # conftest enables x64, so 64-bit requests resolve to themselves
+    assert resolve_value_dtype(jnp.float64) == np.dtype(np.float64)
+    assert resolve_value_dtype(jnp.complex128) == np.dtype(np.complex128)
+    assert resolve_value_dtype(jnp.float32) == np.dtype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    A = circuit_jacobian(90, avg_degree=4.0, seed=5)
+    As = symbolic_fillin_gp(A)
+    return A, As, build_plan(As)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.complex128])
+def test_solve_does_not_delete_caller_rhs(small_plan, dtype):
+    """Regression: reusing the rhs after solve()/solve_batched() used to
+    raise ``RuntimeError: Array has been deleted`` when the rhs was already
+    a JAX array of the factor dtype."""
+    A, As, plan = small_plan
+    fx = JaxFactorizer(plan, dtype=dtype)
+    ts = JaxTriangularSolver(plan)
+    vals = fx.factorize(np.asarray(A.data).astype(np.dtype(dtype)))
+    b_np = np.arange(1.0, A.n + 1.0).astype(np.dtype(dtype))
+    b = jnp.asarray(b_np)
+    assert b.dtype == vals.dtype         # the exact no-op-asarray hazard
+    x = ts.solve(vals, b)
+    np.testing.assert_array_equal(np.asarray(b), b_np)   # b must survive
+    r = trisolve_numpy(plan, np.asarray(vals), b_np)
+    np.testing.assert_allclose(np.asarray(x), r, rtol=1e-10, atol=1e-12)
+
+    vb = jnp.stack([vals, vals])
+    bb = jnp.asarray(np.stack([b_np, 2.0 * b_np]))
+    xb = ts.solve_batched(vb, bb)
+    np.testing.assert_array_equal(np.asarray(bb),
+                                  np.stack([b_np, 2.0 * b_np]))
+    np.testing.assert_allclose(np.asarray(xb[1]), 2.0 * np.asarray(xb[0]),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_refined_solve_keeps_rhs(small_plan):
+    A, As, plan = small_plan
+    fx = JaxFactorizer(plan, dtype=jnp.float64)
+    ts = JaxTriangularSolver(plan)
+    vals = fx.factorize(A.data)
+    rows = As.indices
+    cols = np.repeat(np.arange(A.n), np.diff(As.indptr))
+    a_vals = jnp.zeros(As.nnz, dtype=jnp.float64).at[
+        jnp.asarray(As.a_scatter)].set(jnp.asarray(A.data))
+    b_np = np.linspace(-1, 1, A.n)
+    b = jnp.asarray(b_np)
+    x, info = ts.solve_refined(vals, b, jnp.asarray(rows), jnp.asarray(cols),
+                               a_vals, jnp.abs(a_vals), max_iter=2, tol=1e-14)
+    np.testing.assert_array_equal(np.asarray(b), b_np)
+    assert info["backward_error"] <= 1e-12
+
+
+def test_host_oracles_preserve_complex():
+    """factorize_numpy / factorize_numpy_fast / leftlooking_numpy on a
+    complex circuit matrix, validated against scipy splu."""
+    A = ac_jacobian(100, omega=3e3, seed=2)
+    As = symbolic_fillin_gp(A)
+    plan = build_plan(As)
+    filled = As.filled_csc(A)
+    assert filled.data.dtype == np.complex128
+    rng = np.random.default_rng(1)
+    b = rng.normal(size=A.n) + 1j * rng.normal(size=A.n)
+    x_ref = spla.splu(sp.csc_matrix((A.data, A.indices, A.indptr),
+                                    shape=(A.n, A.n))).solve(b)
+    for fn in (factorize_numpy, factorize_numpy_fast, leftlooking_numpy):
+        lu = fn(As, filled.data)
+        assert lu.dtype == np.complex128
+        x = trisolve_numpy(plan, lu, b)
+        assert x.dtype == np.complex128
+        np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-12)
+
+
+def test_host_oracles_promote_narrow_dtypes():
+    A = circuit_jacobian(40, avg_degree=3.0, seed=9)
+    As = symbolic_fillin_gp(A)
+    vals32 = As.filled_csc(A).data.astype(np.float32)
+    assert factorize_numpy(As, vals32).dtype == np.float64
+    valsc64 = As.filled_csc(A).data.astype(np.complex64)
+    assert factorize_numpy(As, valsc64).dtype == np.complex128
+
+
+def test_csc_from_coo_preserves_complex():
+    from repro.sparse.csc import csc_from_coo
+
+    A = csc_from_coo(2, [0, 1, 0], [0, 1, 1], np.array([1 + 1j, 2.0, -1j]))
+    assert A.data.dtype == np.complex128
+    B = csc_from_coo(2, [0, 1], [0, 1], [1, 2])     # ints still promote
+    assert B.data.dtype == np.float64
