@@ -19,6 +19,7 @@ def _sections():
         bench_levelization,
         bench_modes,
         bench_robustness,
+        bench_sparse_rhs,
         bench_threshold,
         bench_transient,
     )
@@ -46,6 +47,9 @@ def _sections():
          bench_robustness.main),
         ("ac", "=== AC sweep: batched complex vs per-frequency loop ===",
          bench_ac.main),
+        ("sparse_rhs",
+         "=== Sparse-RHS trisolve: reach-pruned vs full schedule ===",
+         bench_sparse_rhs.main),
     ]
 
 

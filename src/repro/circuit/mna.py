@@ -46,25 +46,36 @@ class Circuit:
         self._pattern: Optional[CSC] = None
 
     # -- element builders ----------------------------------------------------
+    def _invalidate_pattern(self) -> None:
+        """Drop the cached pattern/stamp maps: any element added after a
+        ``pattern()`` call must be reflected by later assembly (a stale
+        cache silently ignored post-pattern ``add_*`` calls)."""
+        self._pattern = None
+
     def add_resistor(self, a: int, b: int, ohms: float) -> None:
         self.resistors.append((a, b, 1.0 / ohms))
+        self._invalidate_pattern()
 
     def add_capacitor(self, a: int, b: int, farads: float) -> None:
         self.capacitors.append((a, b, farads))
+        self._invalidate_pattern()
 
     def add_current_source(self, a: int, b: int, i_fn) -> None:
         """Current flows from node a to node b through the source."""
         fn = i_fn if callable(i_fn) else (lambda t, v=float(i_fn): v)
         self.isources.append((a, b, fn))
+        self._invalidate_pattern()
 
     def add_ac_current_source(self, a: int, b: int, phasor=1.0) -> None:
         """Small-signal excitation for AC analysis: a current phasor
         flowing from node a to node b.  Ignored by transient assembly
         (AC sources are zero at the DC operating point by definition)."""
         self.ac_isources.append((a, b, complex(phasor)))
+        self._invalidate_pattern()
 
     def add_diode(self, a: int, b: int, i_sat: float = 1e-12, v_t: float = 0.02585) -> None:
         self.diodes.append((a, b, i_sat, v_t))
+        self._invalidate_pattern()
 
     # -- pattern -------------------------------------------------------------
     def _conductance_pairs(self):

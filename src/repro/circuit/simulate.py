@@ -6,24 +6,59 @@ values on the fixed pattern — the exact workload GLU3.0 accelerates
 ("the numeric factorization on GPU might be repeated many times when
 solving a nonlinear equation with Newton-Raphson method").
 
-MC64 re-scaling rebuilds construct a fresh ``GLU`` on the *same* pattern, so
-they go through the planner's content-addressed cache: only the
-value-dependent matching/scaling is recomputed, the symbolic plan is a
-cache hit (``plan_cache_hits`` on the results counts them).
+Degraded factorizations are handled by the adaptive refactorization ladder
+(:mod:`repro.circuit.ladder`): instead of one blunt re-scaling rebuild, the
+drivers escalate refactorize -> re-scale -> static-pivot bump -> full
+replan, climbing only as far as the diagnostics demand
+(``escalation="rescale"`` selects the pre-ladder single-rebuild behavior,
+``"none"`` disables recovery).  Rebuilds construct a fresh ``GLU`` on the
+*same* pattern, so the re-scale and bump rungs go through the planner's
+content-addressed cache: only the value-dependent matching/scaling is
+recomputed, the symbolic plan is a cache hit (``plan_cache_hits`` on the
+results counts them); only the last-resort replan rung bypasses the cache.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from ..core.api import GLU
+from .ladder import LadderConfig, RefactorizationLadder
 from .mna import Circuit
 
 __all__ = ["ACSweepResult", "TransientResult", "TransientSweepResult",
            "ac_sweep", "transient", "transient_sweep", "perturbed_copies"]
+
+
+def _empty_ladder_counts() -> dict:
+    from .ladder import RUNGS
+    return {name: 0 for name in RUNGS}
+
+
+def _make_ladder(escalation, config: Optional[LadderConfig]):
+    if escalation == "ladder":
+        return RefactorizationLadder(config)
+    if escalation in ("rescale", "none"):
+        return None
+    raise ValueError(
+        f"escalation must be 'ladder', 'rescale' or 'none', got {escalation!r}")
+
+
+def _worst_index(glu) -> int:
+    """Representative copy of a batched factorization for a rebuild: worst
+    backward error when refinement ran, else worst pivot growth."""
+    info = glu.solve_info or {}
+    for key in ("backward_error", "pivot_growth"):
+        v = info.get(key)
+        if v is not None and np.ndim(v) > 0:
+            a = np.asarray(v, dtype=np.float64)
+            a = np.where(np.isfinite(a), a, np.inf)
+            return int(np.argmax(a))
+    return 0
 
 
 @dataclasses.dataclass
@@ -35,8 +70,10 @@ class TransientResult:
     setup_seconds: float
     solve_seconds: float
     max_residual: float
-    n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
+    n_rescalings: int = 0       # cache-served scaling rebuilds (rescale/bump rungs)
     plan_cache_hits: int = 0    # GLU constructions served by the plan cache
+    n_full_rebuilds: int = 0    # ALL ladder-triggered rebuilds (rungs 1-3)
+    ladder_counts: Optional[dict] = None  # per-rung action counts
 
 
 def transient(
@@ -52,18 +89,31 @@ def transient(
     refine: Optional[int] = None,
     refine_tol: Optional[float] = None,
     static_pivot: Optional[float] = None,
+    mc64="scale",
+    escalation: str = "ladder",
+    ladder_config: Optional[LadderConfig] = None,
 ) -> TransientResult:
     """Backward-Euler + Newton transient.  ``refine=None`` (default) leaves
     a prebuilt ``glu``'s own refinement default in charge; an explicit
-    integer — including 0 — overrides it per solve.  With ``refine > 0``
-    every linear solve runs iterative refinement and the Newton loop consumes
-    ``GLU.solve_info``: a solve whose componentwise backward error misses
-    tolerance triggers a re-scaling rebuild (fresh MC64 matching/scaling on
-    the *current* operating point's Jacobian) and a retry — the operating
-    point can drift far from the values the setup-time scaling saw.  At
-    most one rebuild fires per time step, and only when this driver
-    constructed the GLU itself (a caller-supplied ``glu`` is never swapped
-    out)."""
+    integer — including 0 — overrides it per solve.
+
+    ``escalation`` selects the recovery policy consulted after every linear
+    solve (only when this driver constructed the GLU itself — a
+    caller-supplied ``glu`` is never swapped out):
+
+    * ``"ladder"`` (default): the adaptive ladder of
+      :mod:`repro.circuit.ladder` — on an unhealthy diagnosis (stalled
+      refinement, non-finite solution, or excessive pivot growth when
+      refinement is off) escalate re-scale -> static-pivot bump -> full
+      replan, one rung per retry; the rung is sticky across the run and at
+      most one top-rung retry fires per time step.  Per-rung counts land in
+      ``ladder_counts``; ``n_rescalings`` counts the cache-served scaling
+      rebuilds and ``n_full_rebuilds`` all ladder-triggered rebuilds.
+    * ``"rescale"``: the pre-ladder behavior — one MC64 re-scaling rebuild
+      per time step when refinement reports non-convergence (requires
+      ``refine > 0``).
+    * ``"none"``: never rebuild.
+    """
     import jax.numpy as jnp
 
     dtype = dtype or jnp.float64
@@ -78,7 +128,8 @@ def transient(
     A0 = CSC(pat.n, pat.indptr, pat.indices, vals0)
     glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
                       refine=refine or 0, refine_tol=refine_tol,
-                      static_pivot=static_pivot)
+                      static_pivot=static_pivot, mc64=mc64)
+    ladder = _make_ladder(escalation, ladder_config)
     # re-scaling rebuilds only apply to a GLU this driver constructed: a
     # caller-prebuilt solver may carry configuration (dense_tail, custom
     # tolerances, ...) that glu_kwargs cannot reproduce, so it is never
@@ -107,11 +158,41 @@ def transient(
             vals, rhs = ckt.assemble(v_it, v_prev, dt, float(t))
             glu.factorize(vals)
             n_fact += 1
+            if ladder is not None:
+                ladder.note_refactorize()
             # an explicit refine (including 0) wins over a prebuilt glu's
             # own default; None defers to it
             v_new = (glu.solve(rhs) if refine is None
                      else glu.solve(rhs, refine=refine))
-            if refine and owns_glu and not rescaled_this_step:
+            if ladder is not None and owns_glu:
+                # escalation ladder: climb one rung per retry while the
+                # diagnosis stays unhealthy.  The rung is sticky across the
+                # run; once at the top, at most one fresh-values retry per
+                # time step (the Newton dv test remains the step's arbiter).
+                # A numerically singular iterate (a device switched fully
+                # off) aborts the climb instead of crashing the run.
+                reason = ladder.diagnose(glu, v_new)
+                while reason is not None:
+                    if ladder.can_escalate():
+                        ladder.escalate(step=s, reason=reason)
+                    elif not rescaled_this_step:
+                        ladder.retry_at_current_rung(step=s, reason=reason)
+                    else:
+                        break
+                    rescaled_this_step = True
+                    try:
+                        glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals),
+                                  **ladder.glu_kwargs(glu_kwargs))
+                    except ValueError:
+                        break
+                    n_plan_hits += int(glu.plan_from_cache)
+                    glu.factorize(vals)
+                    n_fact += 1
+                    v_new = (glu.solve(rhs) if refine is None
+                             else glu.solve(rhs, refine=refine))
+                    reason = ladder.diagnose(glu, v_new)
+            elif (escalation == "rescale" and refine and owns_glu
+                    and not rescaled_this_step):
                 # cheap flag read: must not force solve_info's deferred
                 # pivot-stat reductions every Newton iterate
                 if glu.refine_converged is False:
@@ -150,6 +231,9 @@ def transient(
         v_prev = v_it
     solve_s = time.perf_counter() - t0
 
+    counts = _empty_ladder_counts() if ladder is None else dict(ladder.counts)
+    if ladder is not None:
+        n_rescale = counts["rescale"] + counts["bump"]
     return TransientResult(
         times=times,
         voltages=volts,
@@ -160,6 +244,8 @@ def transient(
         max_residual=max_res,
         n_rescalings=n_rescale,
         plan_cache_hits=n_plan_hits,
+        n_full_rebuilds=0 if ladder is None else ladder.n_full_rebuilds,
+        ladder_counts=counts,
     )
 
 
@@ -173,8 +259,10 @@ class TransientSweepResult:
     setup_seconds: float
     solve_seconds: float
     max_residual: float         # worst over sweep copies and time steps
-    n_rescalings: int = 0       # MC64 re-scaling rebuilds triggered by solve_info
+    n_rescalings: int = 0       # cache-served scaling rebuilds (rescale/bump rungs)
     plan_cache_hits: int = 0    # GLU constructions served by the plan cache
+    n_full_rebuilds: int = 0    # ALL ladder-triggered rebuilds (rungs 1-3)
+    ladder_counts: Optional[dict] = None  # per-rung action counts
 
 
 def perturbed_copies(ckt: Circuit, scales) -> list:
@@ -188,6 +276,7 @@ def perturbed_copies(ckt: Circuit, scales) -> list:
         c.resistors = [(a, b, g * s) for a, b, g in ckt.resistors]
         c.capacitors = [(a, b, cap * s) for a, b, cap in ckt.capacitors]
         c.isources = list(ckt.isources)
+        c.ac_isources = list(ckt.ac_isources)
         c.diodes = list(ckt.diodes)
         out.append(c)
     return out
@@ -206,6 +295,9 @@ def transient_sweep(
     refine: Optional[int] = None,
     refine_tol: Optional[float] = None,
     static_pivot: Optional[float] = None,
+    mc64="scale",
+    escalation: str = "ladder",
+    ladder_config: Optional[LadderConfig] = None,
 ) -> TransientSweepResult:
     """Run B parameter-perturbed copies of ``ckt`` through backward-Euler +
     Newton in lockstep on ONE symbolic plan (the Monte-Carlo / corner-sweep
@@ -214,6 +306,11 @@ def transient_sweep(
     Each iterate assembles all B Jacobians on the host, then a single
     fused ``GLU.refactorize_solve`` factorizes and solves the whole batch
     on device.  The step's Newton loop ends when every copy converges.
+
+    ``escalation`` follows :func:`transient`: the default ``"ladder"``
+    climbs re-scale -> bump -> replan on unhealthy diagnostics, with the
+    worst copy of the batch as the rebuild's scaling representative (one
+    shared plan, so one representative picks the scaling).
     """
     import jax.numpy as jnp
 
@@ -231,7 +328,8 @@ def transient_sweep(
 
     glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
                       refine=refine or 0, refine_tol=refine_tol,
-                      static_pivot=static_pivot)
+                      static_pivot=static_pivot, mc64=mc64)
+    ladder = _make_ladder(escalation, ladder_config)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0), **glu_kwargs)
     n_plan_hits = int(glu.plan_from_cache)
     setup_s = time.perf_counter() - t0
@@ -260,7 +358,31 @@ def transient_sweep(
             vals, rhs = assemble_all(v_it, v_prev, float(t))
             v_new = glu.refactorize_solve(vals, rhs)
             n_fact += 1
-            if refine and not rescaled_this_step:
+            if ladder is not None:
+                ladder.note_refactorize()
+                # same climb policy as ``transient``; the rebuild's scaling
+                # representative is the worst copy of the batch
+                reason = ladder.diagnose(glu, v_new)
+                while reason is not None:
+                    if ladder.can_escalate():
+                        ladder.escalate(step=s, reason=reason)
+                    elif not rescaled_this_step:
+                        ladder.retry_at_current_rung(step=s, reason=reason)
+                    else:
+                        break
+                    rescaled_this_step = True
+                    worst = _worst_index(glu)
+                    try:
+                        glu = GLU(CSC(pat.n, pat.indptr, pat.indices,
+                                      vals[worst]),
+                                  **ladder.glu_kwargs(glu_kwargs))
+                    except ValueError:
+                        break
+                    n_plan_hits += int(glu.plan_from_cache)
+                    v_new = glu.refactorize_solve(vals, rhs)
+                    n_fact += 1
+                    reason = ladder.diagnose(glu, v_new)
+            elif escalation == "rescale" and refine and not rescaled_this_step:
                 # cheap flag read per iterate; the full solve_info (with its
                 # deferred device reductions) is only pulled on the rare
                 # rebuild path below
@@ -297,6 +419,9 @@ def transient_sweep(
         v_prev = v_it
     solve_s = time.perf_counter() - t0
 
+    counts = _empty_ladder_counts() if ladder is None else dict(ladder.counts)
+    if ladder is not None:
+        n_rescale = counts["rescale"] + counts["bump"]
     return TransientSweepResult(
         scales=scales,
         times=times,
@@ -308,6 +433,8 @@ def transient_sweep(
         max_residual=max_res,
         n_rescalings=n_rescale,
         plan_cache_hits=n_plan_hits,
+        n_full_rebuilds=0 if ladder is None else ladder.n_full_rebuilds,
+        ladder_counts=counts,
     )
 
 
@@ -334,6 +461,9 @@ class ACSweepResult:
     solve_seconds: float         # the batched complex linear solve
     max_backward_error: float    # worst componentwise berr over all freqs
     plan_cache_hits: int = 0     # GLU constructions served by the plan cache
+    op_converged: bool = True    # DC operating-point Newton loop met newton_tol
+    n_full_rebuilds: int = 0     # ladder-triggered rebuilds (DC + AC phases)
+    ladder_counts: Optional[dict] = None  # per-rung action counts
 
 
 def ac_sweep(
@@ -346,6 +476,9 @@ def ac_sweep(
     refine: int = 2,
     refine_tol: Optional[float] = None,
     static_pivot: Optional[float] = None,
+    mc64="scale",
+    escalation: str = "ladder",
+    ladder_config: Optional[LadderConfig] = None,
 ) -> ACSweepResult:
     """AC small-signal frequency sweep: ``A(w) x(w) = b`` at every point.
 
@@ -362,6 +495,15 @@ def ac_sweep(
     values — the componentwise backward error is written in terms of
     ``|.|`` — and ``max_backward_error`` reports the worst frequency point
     on the *original* (unscaled) systems.
+
+    The excitation vector is nonzero only at the AC current-source nodes,
+    so the batched solve passes that support as ``rhs_pattern`` and the
+    initial triangular solves run on the reach-pruned schedule.  One
+    escalation ladder (see :func:`transient`) is shared by the DC
+    operating-point loop and the AC phase: a rung climbed while finding
+    the op point carries into the AC solver's construction.  A
+    non-converged op-point Newton loop sets ``op_converged=False`` and
+    warns — the sweep would silently linearize at a wrong operating point.
     """
     import jax.numpy as jnp
 
@@ -370,6 +512,7 @@ def ac_sweep(
     freqs = np.atleast_1d(np.asarray(freqs, dtype=np.float64))
     pat = ckt.pattern()
     n = ckt.n
+    ladder = _make_ladder(escalation, ladder_config)
 
     t0 = time.perf_counter()
     # DC operating point: dt=0 assembly opens the capacitors; the AC
@@ -378,6 +521,12 @@ def ac_sweep(
     glu_dc = None
     n_plan_hits = 0
     op_iters = 0
+    dv = np.inf
+    dc_kwargs = dict(ordering=ordering, dtype=jnp.float64,
+                     use_pallas=use_pallas, refine=refine,
+                     refine_tol=refine_tol, static_pivot=static_pivot,
+                     mc64=mc64)
+    rebuilt_dc = False
     for it in range(max_newton):
         vals, rhs = ckt.assemble(v, v, 0.0, 0.0)
         if glu_dc is None:
@@ -385,29 +534,91 @@ def ac_sweep(
             # the AC phase — a bad op point would silently poison the
             # linearization no matter how accurate the AC solves are
             glu_dc = GLU(CSC(pat.n, pat.indptr, pat.indices, vals),
-                         ordering=ordering, dtype=jnp.float64,
-                         use_pallas=use_pallas, refine=refine,
-                         refine_tol=refine_tol, static_pivot=static_pivot)
+                         **(dc_kwargs if ladder is None
+                            else ladder.glu_kwargs(dc_kwargs)))
             n_plan_hits += int(glu_dc.plan_from_cache)
         glu_dc.factorize(vals)
         v_new = glu_dc.solve(rhs)
+        if ladder is not None:
+            ladder.note_refactorize()
+            reason = ladder.diagnose(glu_dc, v_new)
+            while reason is not None:
+                if ladder.can_escalate():
+                    ladder.escalate(step="dc-op", reason=reason)
+                elif not rebuilt_dc:
+                    ladder.retry_at_current_rung(step="dc-op", reason=reason)
+                else:
+                    break
+                rebuilt_dc = True
+                try:
+                    glu_dc = GLU(CSC(pat.n, pat.indptr, pat.indices, vals),
+                                 **ladder.glu_kwargs(dc_kwargs))
+                except ValueError:
+                    break
+                n_plan_hits += int(glu_dc.plan_from_cache)
+                glu_dc.factorize(vals)
+                v_new = glu_dc.solve(rhs)
+                reason = ladder.diagnose(glu_dc, v_new)
         dv = np.abs(v_new - v).max()
         v = v_new
         op_iters = it + 1
         if dv < newton_tol:
             break
+    op_converged = bool(dv < newton_tol)
+    if not op_converged:
+        warnings.warn(
+            f"ac_sweep: DC operating-point Newton loop did not converge in "
+            f"{max_newton} iterations (last |dv| = {dv:.3g} >= newton_tol "
+            f"= {newton_tol:.3g}); the sweep linearizes at an unconverged "
+            f"operating point", RuntimeWarning, stacklevel=2)
+
+    # the AC excitation's nonzero support: reach-pruned triangular solves
+    # need b to be EXACTLY zero outside the pattern
+    ac_nodes = sorted({node - 1 for a, b, _ in ckt.ac_isources
+                       for node in (a, b) if node > 0})
+    rhs_pattern = np.asarray(ac_nodes, dtype=np.int64) if ac_nodes else None
 
     # one complex plan for the whole sweep (MC64 matches/scales on |A(w0)|)
     vals_ac, rhs_ac = ckt.assemble_ac(v, freqs)
+    ac_kwargs = dict(ordering=ordering, dtype=jnp.complex128,
+                     use_pallas=use_pallas, refine=refine,
+                     refine_tol=refine_tol, static_pivot=static_pivot,
+                     mc64=mc64)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals_ac[0]),
-              ordering=ordering, dtype=jnp.complex128,
-              use_pallas=use_pallas, refine=refine, refine_tol=refine_tol,
-              static_pivot=static_pivot)
+              **(ac_kwargs if ladder is None
+                 else ladder.glu_kwargs(ac_kwargs)))
     n_plan_hits += int(glu.plan_from_cache)
     setup_s = time.perf_counter() - t0
+    n_batched = 0
 
     t0 = time.perf_counter()
-    x = glu.refactorize_solve(vals_ac, rhs_ac)
+    x = glu.refactorize_solve(vals_ac, rhs_ac, rhs_pattern=rhs_pattern)
+    n_batched += 1
+    if ladder is not None:
+        ladder.note_refactorize()
+        # AC-phase recovery: rebuild on the worst frequency point's values
+        # (one shared plan, one representative for the scaling)
+        reason = ladder.diagnose(glu, x)
+        rebuilt_ac = False
+        while reason is not None:
+            if ladder.can_escalate():
+                ladder.escalate(step="ac", reason=reason)
+            elif not rebuilt_ac:
+                ladder.retry_at_current_rung(step="ac", reason=reason)
+            else:
+                break
+            rebuilt_ac = True
+            worst = _worst_index(glu)
+            try:
+                glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals_ac[worst]),
+                          **ladder.glu_kwargs(ac_kwargs))
+            except ValueError:
+                break
+            n_plan_hits += int(glu.plan_from_cache)
+            x = glu.refactorize_solve(vals_ac, rhs_ac,
+                                      rhs_pattern=rhs_pattern)
+            n_batched += 1
+            reason = ladder.diagnose(glu, x)
     solve_s = time.perf_counter() - t0
 
     # componentwise backward error on the original systems, all F points in
@@ -433,9 +644,13 @@ def ac_sweep(
         voltages=x,
         op_point=v,
         op_newton_iters=op_iters,
-        n_batched_factorizations=1,
+        n_batched_factorizations=n_batched,
         setup_seconds=setup_s,
         solve_seconds=solve_s,
         max_backward_error=max_berr,
         plan_cache_hits=n_plan_hits,
+        op_converged=op_converged,
+        n_full_rebuilds=0 if ladder is None else ladder.n_full_rebuilds,
+        ladder_counts=(_empty_ladder_counts() if ladder is None
+                       else dict(ladder.counts)),
     )

@@ -257,10 +257,35 @@ class GLU:
             raise RuntimeError("call factorize() first")
         return self._vals
 
-    def solve(self, b, refine: Optional[int] = None) -> np.ndarray:
+    def _map_rhs_pattern(self, rhs_pattern, b) -> Optional[np.ndarray]:
+        """Translate a rhs nonzero pattern from ORIGINAL row indices to the
+        solver's permuted positions, validating that ``b`` really is zero
+        outside the pattern (a nonzero outside it would be silently
+        dropped by the pruned schedule)."""
+        if rhs_pattern is None:
+            return None
+        pat = np.unique(np.asarray(rhs_pattern, dtype=np.int64).ravel())
+        if pat.size and (pat[0] < 0 or pat[-1] >= self.n):
+            raise ValueError(f"rhs_pattern indices out of range [0, {self.n})")
+        mask = np.zeros(self.n, dtype=bool)
+        mask[pat] = True
+        bad = np.asarray(b) != 0
+        if bad.ndim == 2:
+            bad = bad.any(axis=0)
+        if np.any(bad & ~mask):
+            raise ValueError(
+                "rhs has nonzero entries outside rhs_pattern; the pruned "
+                "solve would silently drop them")
+        return self.row_map[pat]
+
+    def solve(self, b, refine: Optional[int] = None,
+              rhs_pattern=None) -> np.ndarray:
         """Solve A x = b using the current factorization; ``refine`` extra
         iterative-refinement sweeps reuse the device factors (default: the
-        constructor's ``refine``)."""
+        constructor's ``refine``).  ``rhs_pattern`` — indices (original row
+        numbering) of b's nonzero support — prunes the triangular-solve
+        schedule to the reach closure of the pattern (raises if b is
+        nonzero outside it)."""
         if self._vals is None:
             if self._vals_batch is not None:
                 raise RuntimeError(
@@ -268,20 +293,59 @@ class GLU:
                     " or call factorize() to refactorize single-matrix first")
             self.factorize()
         k = self.refine_default if refine is None else int(refine)
+        pat = self._map_rhs_pattern(rhs_pattern, b)
         bp = (np.asarray(b) * self.Dr)[self._inv_row]
         if k > 0:
             if self._a_abs is None:
                 self._a_abs = jnp.abs(self._a_vals)
             xp, rinfo = self._solver.solve_refined(
                 self._vals, bp, self._spmv_rows, self._spmv_cols,
-                self._a_vals, self._a_abs, max_iter=k, tol=self.refine_tol)
+                self._a_vals, self._a_abs, max_iter=k, tol=self.refine_tol,
+                rhs_pattern=pat)
             xp = np.asarray(xp)
         else:
-            xp = np.asarray(self._solver.solve(self._vals, bp))
+            xp = np.asarray(self._solver.solve(self._vals, bp,
+                                               rhs_pattern=pat))
             rinfo = {"refine_iters": 0, "backward_error": None,
-                     "converged": None}
+                     "converged": None, "host_syncs": 0}
         self._set_solve_info(rinfo)
         return xp[self.col_map] * self.Dc
+
+    def solve_multi(self, b_multi, refine: Optional[int] = None,
+                    rhs_pattern=None) -> np.ndarray:
+        """Solve A X^T = B^T — many right-hand sides against the CURRENT
+        single-matrix factorization (the adjoint/sensitivity workload:
+        K seed vectors, one Jacobian).  ``b_multi`` is (K, n), returns
+        (K, n); each level group is one device dispatch for all K rhs.
+        ``rhs_pattern`` is the union support of all rows."""
+        if self._vals is None:
+            if self._vals_batch is not None:
+                raise RuntimeError(
+                    "the active factorization is batched — use solve_batched(),"
+                    " or call factorize() to refactorize single-matrix first")
+            self.factorize()
+        b = np.asarray(b_multi)
+        if b.ndim != 2 or b.shape[1] != self.n:
+            raise ValueError(f"expected (K, {self.n}) rhs, got {b.shape}")
+        k = self.refine_default if refine is None else int(refine)
+        pat = self._map_rhs_pattern(rhs_pattern, b)
+        bp = (b * self.Dr[None, :])[:, self._inv_row]
+        if k > 0:
+            if self._a_abs is None:
+                self._a_abs = jnp.abs(self._a_vals)
+            xp, rinfo = self._solver.solve_refined_multi(
+                self._vals, bp, self._spmv_rows, self._spmv_cols,
+                self._a_vals, self._a_abs, max_iter=k, tol=self.refine_tol,
+                rhs_pattern=pat)
+            xp = np.asarray(xp)
+        else:
+            xp = np.asarray(self._solver.solve_multi(self._vals, bp,
+                                                     rhs_pattern=pat))
+            rinfo = {"refine_iters": np.zeros(b.shape[0], dtype=np.int64),
+                     "backward_error": None, "converged": None,
+                     "host_syncs": 0}
+        self._set_solve_info(rinfo)
+        return xp[:, self.col_map] * self.Dc[None, :]
 
     # -- batched numeric phase (one plan, many matrices) ----------------------
     def factorize_batched(self, a_data_batch) -> "GLU":
@@ -312,12 +376,15 @@ class GLU:
             raise RuntimeError("call factorize_batched() first")
         return self._vals_batch
 
-    def solve_batched(self, b_batch, refine: Optional[int] = None) -> np.ndarray:
+    def solve_batched(self, b_batch, refine: Optional[int] = None,
+                      rhs_pattern=None) -> np.ndarray:
         """Solve A_i x_i = b_i for every matrix of the current batched
-        factorization; ``b_batch`` is (B, n), returns (B, n)."""
+        factorization; ``b_batch`` is (B, n), returns (B, n).  A
+        ``rhs_pattern`` is shared by the batch (union support)."""
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
         k = self.refine_default if refine is None else int(refine)
+        pat = self._map_rhs_pattern(rhs_pattern, np.asarray(b_batch))
         bp = (np.asarray(b_batch) * self.Dr[None, :])[:, self._inv_row]
         if k > 0:
             if self._a_abs_batch is None:
@@ -325,17 +392,20 @@ class GLU:
             xp, rinfo = self._solver.solve_refined_batched(
                 self._vals_batch, bp, self._spmv_rows, self._spmv_cols,
                 self._a_vals_batch, self._a_abs_batch,
-                max_iter=k, tol=self.refine_tol)
+                max_iter=k, tol=self.refine_tol, rhs_pattern=pat)
             xp = np.asarray(xp)
         else:
-            xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp))
+            xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp,
+                                                       rhs_pattern=pat))
             rinfo = {"refine_iters": np.zeros(bp.shape[0], dtype=np.int64),
-                     "backward_error": None, "converged": None}
+                     "backward_error": None, "converged": None,
+                     "host_syncs": 0}
         self._set_solve_info(rinfo)
         return xp[:, self.col_map] * self.Dc[None, :]
 
     def refactorize_solve(self, a_data_batch, b_batch,
-                          refine: Optional[int] = None) -> np.ndarray:
+                          refine: Optional[int] = None,
+                          rhs_pattern=None) -> np.ndarray:
         """Fused batched refactorize + solve in one call (the Newton inner
         step of a parameter sweep).  Accepts (B, nnz)+(B, n) or a single
         (nnz,)+(n,) pair; the factored values stay on device between the
@@ -346,7 +416,7 @@ class GLU:
         if single:
             data, b = data[None], b[None]
         self.factorize_batched(data)
-        x = self.solve_batched(b, refine=refine)
+        x = self.solve_batched(b, refine=refine, rhs_pattern=rhs_pattern)
         if single:
             self._vals = self._vals_batch[0]
             self._a_vals = self._a_vals_batch[0]

@@ -31,7 +31,8 @@ from ..sparse.csc import csc_transpose_pattern
 from .dependency import Levelization, levelize_relaxed, longest_path_levels
 from .symbolic import FilledPattern
 
-__all__ = ["FactorizePlan", "LevelSegment", "build_plan", "MODE_FLAT", "MODE_SEGMENTED", "MODE_PANEL"]
+__all__ = ["FactorizePlan", "LevelSegment", "build_plan", "reach_closure",
+           "MODE_FLAT", "MODE_SEGMENTED", "MODE_PANEL"]
 
 MODE_FLAT = "flat"            # one fused scatter-add (type A levels)
 MODE_SEGMENTED = "segmented"  # Pallas per-destination-column kernel (type B)
@@ -55,6 +56,31 @@ class LevelSegment:
     @property
     def n_upd(self) -> int:
         return self.upd_slice.stop - self.upd_slice.start
+
+
+def reach_closure(n: int, adj_ptr: np.ndarray, adj_rows: np.ndarray,
+                  seeds: np.ndarray) -> np.ndarray:
+    """Transitive closure of ``seeds`` under the DAG ``col j -> adj_rows
+    [adj_ptr[j]:adj_ptr[j+1]]``, as a sorted index array.
+
+    This is the Gilbert-Peierls reach computation driving sparse-RHS
+    triangular solves (Ruipeng Li, arXiv 1710.04985): the nonzero set of
+    ``L^{-1} b`` is exactly the closure of ``nonzeros(b)`` under L's
+    below-diagonal adjacency.  Frontier-batched BFS, same discipline as the
+    vectorized symbolic engine: one ranged-concat gather per wave."""
+    seeds = np.unique(np.asarray(seeds, dtype=np.int64))
+    if seeds.size and (seeds[0] < 0 or seeds[-1] >= n):
+        raise ValueError(f"rhs pattern indices out of range [0, {n})")
+    visited = np.zeros(n, dtype=bool)
+    visited[seeds] = True
+    frontier = seeds
+    while frontier.size:
+        cand = adj_rows[_concat_ranges(adj_ptr[frontier],
+                                       adj_ptr[frontier + 1])]
+        cand = np.unique(cand[~visited[cand]])
+        visited[cand] = True
+        frontier = cand
+    return np.flatnonzero(visited)
 
 
 @dataclasses.dataclass
@@ -86,6 +112,25 @@ class FactorizePlan:
     bwd_ptr: np.ndarray
     bwd_level_cols: np.ndarray    # columns ordered by U-level
     bwd_col_ptr: np.ndarray
+    # sparse-RHS reach machinery: CSR-ish DAG adjacency of L (below-diagonal
+    # rows per column) and U (above-diagonal rows per column), computed at
+    # plan time so per-pattern reach closures are pure index walks
+    l_adj_ptr: np.ndarray
+    l_adj_rows: np.ndarray
+    u_adj_ptr: np.ndarray
+    u_adj_rows: np.ndarray
+
+    def fwd_reach(self, nonzeros) -> np.ndarray:
+        """Columns of ``y = L^{-1} b`` that can be nonzero when ``b`` is
+        supported on ``nonzeros`` (sorted index array)."""
+        return reach_closure(self.n, self.l_adj_ptr, self.l_adj_rows,
+                             nonzeros)
+
+    def bwd_reach(self, nonzeros) -> np.ndarray:
+        """Rows of ``x = U^{-1} y`` that can be nonzero when ``y`` is
+        supported on ``nonzeros`` (sorted index array)."""
+        return reach_closure(self.n, self.u_adj_ptr, self.u_adj_rows,
+                             nonzeros)
 
     @property
     def num_levels(self) -> int:
@@ -181,6 +226,9 @@ def build_plan(
     fwd_vidx = _concat_ranges(l_start, l_end)
     fwd_rows = indices[fwd_vidx].astype(np.int64)
     fwd_cols = all_cols_l
+    # reach adjacency of the L DAG: captured column-major, before level sort
+    l_adj_ptr = np.concatenate([[0], np.cumsum(nnz_l)]).astype(np.int64)
+    l_adj_rows = fwd_rows.copy()
     fwd_lev = levels[fwd_cols]
     srt = np.argsort(fwd_lev, kind="stable")
     fwd_rows, fwd_cols, fwd_vidx, fwd_lev = (
@@ -202,6 +250,9 @@ def build_plan(
     bwd_vidx = _concat_ranges(u_start, u_end)
     bwd_rows = indices[bwd_vidx].astype(np.int64)
     bwd_cols = np.repeat(np.arange(n, dtype=np.int64), nnz_u)
+    # reach adjacency of the U DAG, same column-major capture
+    u_adj_ptr = np.concatenate([[0], np.cumsum(nnz_u)]).astype(np.int64)
+    u_adj_rows = bwd_rows.copy()
     bwd_lev = ulev[bwd_cols]
     srt = np.argsort(bwd_lev, kind="stable")
     bwd_rows, bwd_cols, bwd_vidx, bwd_lev = (
@@ -235,4 +286,8 @@ def build_plan(
         bwd_ptr=bwd_ptr,
         bwd_level_cols=col_order,
         bwd_col_ptr=bwd_col_ptr,
+        l_adj_ptr=l_adj_ptr,
+        l_adj_rows=l_adj_rows,
+        u_adj_ptr=u_adj_ptr,
+        u_adj_rows=u_adj_rows,
     )

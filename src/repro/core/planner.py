@@ -61,7 +61,7 @@ __all__ = [
 
 # bumped whenever SymbolicPlan's layout changes, so stale on-disk plans from
 # an older build never deserialize into a newer consumer
-PLAN_FORMAT_VERSION = 1
+PLAN_FORMAT_VERSION = 2    # v2: FactorizePlan grew the reach adjacency arrays
 
 
 # --------------------------------------------------------------------------

@@ -6,14 +6,29 @@ column j must wait for all c < j with L(j,c) != 0 — is exactly the paper's
 "look left" relaxed rule, so the same levelization is valid).  The backward
 sweep uses U-row levels computed at plan time.
 
+Sparse right-hand sides: circuit RHS vectors are mostly zeros (an AC
+excitation is often 1-2 entries), and the solution of ``L y = b`` is
+supported exactly on the reach of ``nonzeros(b)`` in L's DAG (Gilbert-
+Peierls; cf. Ruipeng Li, arXiv 1710.04985).  ``solve(..., rhs_pattern=...)``
+prunes the level-group schedule to that reach — entries whose source column
+is outside the closure contribute exact zeros and are dropped wholesale, so
+the pruned solve is bit-identical to the full one on the reach.  Pruned
+schedules are cached per rhs pattern (the contract is many solves per
+pattern: a fixed excitation across a sweep).
+
 Refinement runs on whatever system the factors describe (for the GLU facade
 that is the scaled + permuted one): each sweep computes ``r = b - A x`` with
 a sparse SpMV of A's values, the componentwise backward error
 ``max_i |r_i| / (|A||x| + |b|)_i`` as the stopping test, and — while above
-tolerance — one more triangular solve on the existing factors.
+tolerance — one more triangular solve on the existing factors.  Sweeps are
+issued in chunks of ``sync_every`` with the convergence mask applied on
+device, so the common ``refine <= 2`` case costs exactly ONE device->host
+sync instead of one per sweep (``host_syncs`` in the returned info counts
+them).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from functools import partial
 
 import numpy as np
@@ -21,7 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import spmv
+from ..kernels.ops import masked_correction, spmv
 from .plan import FactorizePlan
 
 __all__ = ["JaxTriangularSolver", "trisolve_numpy"]
@@ -106,6 +121,14 @@ def _residual_berr_batched(rows, cols, a_vals, a_abs, x, b, *, n):
     )(a_vals, a_abs, x, b)
 
 
+# Many-RHS twin: one value vector, (K, n) right-hand sides.
+@partial(jax.jit, static_argnames=("n",))
+def _residual_berr_multi(rows, cols, a_vals, a_abs, x, b, *, n):
+    return jax.vmap(
+        lambda xx, bb: _residual_berr_body(rows, cols, a_vals, a_abs, xx, bb, n)
+    )(x, b)
+
+
 _fwd_group = partial(jax.jit, donate_argnums=(1,))(_fwd_group_body)
 _bwd_group = partial(jax.jit, donate_argnums=(1,))(_bwd_group_body)
 
@@ -116,12 +139,33 @@ _fwd_group_batched = partial(jax.jit, donate_argnums=(1,))(
 _bwd_group_batched = partial(jax.jit, donate_argnums=(1,))(
     jax.vmap(_bwd_group_body, in_axes=(0, 0, None, None, None, None, None)))
 
+# Many-RHS twins: ONE factor value vector shared by every rhs row — the
+# adjoint/sensitivity workload (K seeds against one factorization).
+_fwd_group_multi = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_fwd_group_body, in_axes=(None, 0, None, None, None)))
+_bwd_group_multi = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_bwd_group_body, in_axes=(None, 0, None, None, None, None, None)))
+
 
 class JaxTriangularSolver:
     """solve(vals, b): forward+backward substitution on the factored values."""
 
+    # pruned schedules kept per rhs pattern; enough for a handful of distinct
+    # excitation/seed patterns without growing unboundedly under adversarial use
+    SPARSE_SCHEDULE_CAP = 32
+
     def __init__(self, plan: FactorizePlan, fuse: bool = True):
         self.plan = plan
+        self._fuse = fuse
+        self._full_schedule = self._build_schedule(None, None)
+        self._sparse_schedules: OrderedDict = OrderedDict()
+
+    def _build_schedule(self, fwd_mask, bwd_mask):
+        """Level-group schedule as (fwd_groups, bwd_groups).  ``fwd_mask`` /
+        ``bwd_mask`` (boolean (n,) column masks) restrict the schedule to
+        the masked columns; levels left empty are dropped entirely (fewer
+        dispatches is where the sparse-RHS win comes from)."""
+        plan, fuse = self.plan, self._fuse
         n = plan.n
         pad_row = n  # out-of-range -> drop
         pad_v = plan.nnz
@@ -151,16 +195,24 @@ class JaxTriangularSolver:
         nlev = len(plan.fwd_ptr) - 1
         for l in range(nlev):
             s, e = int(plan.fwd_ptr[l]), int(plan.fwd_ptr[l + 1])
-            p = _pow2(e - s)
+            rows = plan.fwd_rows[s:e]
+            cols = plan.fwd_cols[s:e]
+            vidx = plan.fwd_vidx[s:e]
+            if fwd_mask is not None:
+                keep = fwd_mask[cols]
+                if not keep.any():
+                    continue
+                rows, cols, vidx = rows[keep], cols[keep], vidx[keep]
+            p = _pow2(len(rows))
             fwd_items.append((
                 (
-                    _pad_i32(plan.fwd_rows[s:e], p, pad_row),
-                    _pad_i32(plan.fwd_cols[s:e], p, pad_row),
-                    _pad_i32(plan.fwd_vidx[s:e], p, pad_v),
+                    _pad_i32(rows, p, pad_row),
+                    _pad_i32(cols, p, pad_row),
+                    _pad_i32(vidx, p, pad_v),
                 ),
                 p,
             ))
-        self._fwd_groups = build_groups(fwd_items)
+        fwd_groups = build_groups(fwd_items)
 
         bwd_items = []
         nulev = len(plan.bwd_ptr) - 1
@@ -169,92 +221,205 @@ class JaxTriangularSolver:
             s, e = int(plan.bwd_ptr[l]), int(plan.bwd_ptr[l + 1])
             cs, ce = int(plan.bwd_col_ptr[l]), int(plan.bwd_col_ptr[l + 1])
             lcols = plan.bwd_level_cols[cs:ce]
-            pu = _pow2(e - s)
-            pc = _pow2(ce - cs)
+            rows = plan.bwd_rows[s:e]
+            cols = plan.bwd_cols[s:e]
+            vidx = plan.bwd_vidx[s:e]
+            if bwd_mask is not None:
+                keepc = bwd_mask[lcols]
+                keepu = bwd_mask[cols]
+                if not keepc.any() and not keepu.any():
+                    continue
+                lcols = lcols[keepc]
+                rows, cols, vidx = rows[keepu], cols[keepu], vidx[keepu]
+            pu = _pow2(len(rows))
+            pc = _pow2(len(lcols))
             bwd_items.append((
                 (
                     _pad_i32(lcols, pc, pad_row),
                     _pad_i32(diag[lcols], pc, pad_v),
-                    _pad_i32(plan.bwd_rows[s:e], pu, pad_row),
-                    _pad_i32(plan.bwd_cols[s:e], pu, pad_row),
-                    _pad_i32(plan.bwd_vidx[s:e], pu, pad_v),
+                    _pad_i32(rows, pu, pad_row),
+                    _pad_i32(cols, pu, pad_row),
+                    _pad_i32(vidx, pu, pad_v),
                 ),
                 (pc, pu),
             ))
-        self._bwd_groups = build_groups(bwd_items)
+        bwd_groups = build_groups(bwd_items)
+        return fwd_groups, bwd_groups
 
-    def solve(self, vals: jnp.ndarray, b) -> jnp.ndarray:
+    # -- sparse-RHS schedule cache -------------------------------------------
+    @staticmethod
+    def _normalize_pattern(rhs_pattern) -> np.ndarray:
+        pat = np.unique(np.asarray(rhs_pattern, dtype=np.int64).ravel())
+        return pat
+
+    def schedule_for_pattern(self, rhs_pattern):
+        """The pruned (fwd_groups, bwd_groups, fwd_reach, bwd_reach) for a
+        rhs supported on ``rhs_pattern``; memoized per pattern (LRU)."""
+        pat = self._normalize_pattern(rhs_pattern)
+        key = pat.tobytes()
+        hit = self._sparse_schedules.get(key)
+        if hit is not None:
+            self._sparse_schedules.move_to_end(key)
+            return hit
+        n = self.plan.n
+        freach = self.plan.fwd_reach(pat)
+        breach = self.plan.bwd_reach(freach)
+        fmask = np.zeros(n, dtype=bool)
+        fmask[freach] = True
+        bmask = np.zeros(n, dtype=bool)
+        bmask[breach] = True
+        fwd_groups, bwd_groups = self._build_schedule(fmask, bmask)
+        entry = (fwd_groups, bwd_groups, freach, breach)
+        self._sparse_schedules[key] = entry
+        while len(self._sparse_schedules) > self.SPARSE_SCHEDULE_CAP:
+            self._sparse_schedules.popitem(last=False)
+        return entry
+
+    def _groups_for(self, rhs_pattern):
+        if rhs_pattern is None:
+            return self._full_schedule
+        fwd, bwd, _, _ = self.schedule_for_pattern(rhs_pattern)
+        return fwd, bwd
+
+    # -- solves ---------------------------------------------------------------
+    def solve(self, vals: jnp.ndarray, b, rhs_pattern=None) -> jnp.ndarray:
+        """With ``rhs_pattern`` (indices of b's nonzero support) the level
+        schedule is pruned to the reach closure of the pattern; ``b`` MUST
+        be zero outside it (the facade validates this)."""
+        fwd, bwd = self._groups_for(rhs_pattern)
         # defensive copy: the jitted group steps donate the rhs buffer, and
         # ``jnp.asarray`` is a no-op on a JAX array already of vals.dtype —
         # without the copy the *caller's* array would be deleted
         x = jnp.array(b, dtype=vals.dtype, copy=True)
-        for g in self._fwd_groups:
+        for g in fwd:
             x = _fwd_group(vals, x, *g)
-        for g in self._bwd_groups:
+        for g in bwd:
             x = _bwd_group(vals, x, *g)
         return x
 
-    def solve_batched(self, vals_batch: jnp.ndarray, b_batch) -> jnp.ndarray:
+    def solve_batched(self, vals_batch: jnp.ndarray, b_batch,
+                      rhs_pattern=None) -> jnp.ndarray:
         """Row i of the result solves with factor values ``vals_batch[i]``
-        and right-hand side ``b_batch[i]`` — B solves in lockstep."""
+        and right-hand side ``b_batch[i]`` — B solves in lockstep.  A
+        ``rhs_pattern`` is shared by the whole batch (union support)."""
         vals = jnp.asarray(vals_batch)
+        fwd, bwd = self._groups_for(rhs_pattern)
         # defensive copy — same donation hazard as :meth:`solve`
         x = jnp.array(b_batch, dtype=vals.dtype, copy=True)
         if vals.ndim != 2 or x.ndim != 2 or vals.shape[0] != x.shape[0]:
             raise ValueError(
                 f"expected (B, nnz) values and (B, n) rhs, got "
                 f"{vals.shape} and {x.shape}")
-        for g in self._fwd_groups:
+        for g in fwd:
             x = _fwd_group_batched(vals, x, *g)
-        for g in self._bwd_groups:
+        for g in bwd:
             x = _bwd_group_batched(vals, x, *g)
         return x
 
+    def solve_multi(self, vals: jnp.ndarray, b_multi,
+                    rhs_pattern=None) -> jnp.ndarray:
+        """Many right-hand sides against ONE set of factor values: ``vals``
+        is (nnz,), ``b_multi`` is (K, n), each level group is one dispatch
+        for all K rhs (the adjoint/sensitivity workload).  A ``rhs_pattern``
+        is the union support of all rows."""
+        vals = jnp.asarray(vals)
+        fwd, bwd = self._groups_for(rhs_pattern)
+        x = jnp.array(b_multi, dtype=vals.dtype, copy=True)
+        if vals.ndim != 1 or x.ndim != 2:
+            raise ValueError(
+                f"expected (nnz,) values and (K, n) rhs, got "
+                f"{vals.shape} and {x.shape}")
+        for g in fwd:
+            x = _fwd_group_multi(vals, x, *g)
+        for g in bwd:
+            x = _bwd_group_multi(vals, x, *g)
+        return x
+
     # -- iterative refinement -------------------------------------------------
+    def _solve_refined_impl(self, kind, vals, b, a_rows, a_cols, a_vals,
+                            a_abs, max_iter, tol, rhs_pattern, sync_every):
+        """Shared chunked-refinement driver.  The initial solve may use the
+        pruned sparse-RHS schedule; corrections solve against a dense
+        residual, so they always run the full schedule.  Convergence is
+        masked on DEVICE (``masked_correction``) and the backward error only
+        crosses to the host once per ``sync_every`` sweeps — the common
+        ``max_iter <= sync_every`` case pays exactly one transfer."""
+        n = self.plan.n
+        b = jnp.asarray(b, dtype=vals.dtype)
+        if kind == "single":
+            solve = self.solve
+            res_fn = _residual_berr
+        elif kind == "batched":
+            solve = self.solve_batched
+            res_fn = _residual_berr_batched
+        else:
+            solve = self.solve_multi
+            res_fn = _residual_berr_multi
+        x = solve(vals, b, rhs_pattern=rhs_pattern)
+        r, berr = res_fn(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
+        iters = jnp.zeros(berr.shape, dtype=jnp.int32)
+        syncs = 0
+        done = 0
+        berr_h = iters_h = None
+        while done < max_iter:
+            chunk = min(max(1, int(sync_every)), max_iter - done)
+            for _ in range(chunk):
+                d = solve(vals, r)
+                x = masked_correction(x, d, berr, tol)
+                iters = iters + (berr > tol)
+                r, berr = res_fn(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
+            done += chunk
+            berr_h, iters_h = jax.device_get((berr, iters))
+            syncs += 1
+            if np.all(berr_h <= tol):
+                break
+        if berr_h is None:                      # max_iter == 0
+            berr_h, iters_h = jax.device_get((berr, iters))
+            syncs += 1
+        if kind == "single":
+            berr_out = float(berr_h)
+            info = {"refine_iters": int(iters_h),
+                    "backward_error": berr_out,
+                    "converged": berr_out <= tol,
+                    "host_syncs": syncs}
+        else:
+            berr_out = np.asarray(berr_h)
+            info = {"refine_iters": np.asarray(iters_h, dtype=np.int64),
+                    "backward_error": berr_out,
+                    "converged": berr_out <= tol,
+                    "host_syncs": syncs}
+        return x, info
+
     def solve_refined(self, vals, b, a_rows, a_cols, a_vals, a_abs,
-                      max_iter: int, tol: float):
+                      max_iter: int, tol: float, rhs_pattern=None,
+                      sync_every: int = 2):
         """Solve then refine: up to ``max_iter`` sweeps of
         ``x += solve(b - A x)`` on the existing factors, stopping when the
         componentwise backward error drops to ``tol``.  ``a_rows``/
         ``a_cols``/``a_vals`` describe A (the matrix the factors came
         from) in COO entry order; ``a_abs`` is ``|a_vals|``.  Returns
         ``(x, info)`` with ``refine_iters``, ``backward_error``,
-        ``converged``."""
-        n = self.plan.n
-        b = jnp.asarray(b, dtype=vals.dtype)
-        x = self.solve(vals, b)             # solve makes its own rhs copy
-        iters = 0
-        r, berr = _residual_berr(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
-        while float(berr) > tol and iters < max_iter:
-            x = x + self.solve(vals, r)
-            iters += 1
-            r, berr = _residual_berr(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
-        berr_f = float(berr)
-        return x, {"refine_iters": iters, "backward_error": berr_f,
-                   "converged": berr_f <= tol}
+        ``converged``, ``host_syncs``."""
+        return self._solve_refined_impl(
+            "single", vals, b, a_rows, a_cols, a_vals, a_abs,
+            max_iter, tol, rhs_pattern, sync_every)
 
     def solve_refined_batched(self, vals, b, a_rows, a_cols, a_vals, a_abs,
-                              max_iter: int, tol: float):
+                              max_iter: int, tol: float, rhs_pattern=None,
+                              sync_every: int = 2):
         """Batched twin of :meth:`solve_refined`: one lockstep sweep per
         round, corrections masked onto the still-unconverged rows, until
         every matrix meets ``tol`` or ``max_iter`` is reached.  Info fields
         are (B,) arrays."""
-        n = self.plan.n
-        b = jnp.asarray(b, dtype=vals.dtype)
-        x = self.solve_batched(vals, b)     # solve makes its own rhs copy
-        B = x.shape[0]
-        iters = np.zeros(B, dtype=np.int64)
-        r, berr = _residual_berr_batched(a_rows, a_cols, a_vals, a_abs, x, b,
-                                         n=n)
-        rounds = 0
-        while bool((berr > tol).any()) and rounds < max_iter:
-            active = np.asarray(berr) > tol
-            d = self.solve_batched(vals, r)
-            x = jnp.where(jnp.asarray(active)[:, None], x + d, x)
-            iters[active] += 1
-            rounds += 1
-            r, berr = _residual_berr_batched(a_rows, a_cols, a_vals, a_abs,
-                                             x, b, n=n)
-        berr_np = np.asarray(berr)
-        return x, {"refine_iters": iters, "backward_error": berr_np,
-                   "converged": berr_np <= tol}
+        return self._solve_refined_impl(
+            "batched", vals, b, a_rows, a_cols, a_vals, a_abs,
+            max_iter, tol, rhs_pattern, sync_every)
+
+    def solve_refined_multi(self, vals, b, a_rows, a_cols, a_vals, a_abs,
+                            max_iter: int, tol: float, rhs_pattern=None,
+                            sync_every: int = 2):
+        """Many-RHS twin: (nnz,) values, (K, n) right-hand sides, shared
+        factors; info fields are (K,) arrays."""
+        return self._solve_refined_impl(
+            "multi", vals, b, a_rows, a_cols, a_vals, a_abs,
+            max_iter, tol, rhs_pattern, sync_every)

@@ -25,6 +25,7 @@ __all__ = [
     "perturb_diags_batched",
     "factor_stats",
     "factor_stats_batched",
+    "masked_correction",
 ]
 
 
@@ -146,3 +147,15 @@ def _factor_stats_body(vals, diag_idx, a_max):
 factor_stats = jax.jit(_factor_stats_body)
 factor_stats_batched = jax.jit(jax.vmap(_factor_stats_body,
                                         in_axes=(0, None, 0)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def masked_correction(x, d, berr, tol):
+    """``x + d`` where the solve is still above tolerance, ``x`` unchanged
+    where it has converged — the device-side convergence mask that lets
+    iterative refinement issue several sweeps without a host sync per
+    sweep.  ``berr`` is a scalar (single solve) or a (B,)/(K,) vector
+    (batched / many-rhs), broadcast across the trailing axes of ``x``."""
+    mask = berr > tol
+    mask = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    return x + jnp.where(mask, d, jnp.zeros((), dtype=x.dtype))

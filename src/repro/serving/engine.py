@@ -69,6 +69,11 @@ class ServeEngine:
         lv = levelize(len(requests),
                       np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64))
         results: dict[int, np.ndarray] = {}
+        # effective (spliced) prompt per request, built WITHOUT mutating the
+        # caller's Request.tokens: a grandchild still sees its parent's full
+        # context through this dict, and running the scheduler twice on the
+        # same request list cannot double-prepend the parent prompt
+        eff: dict[int, np.ndarray] = {}
         for level in range(lv.num_levels):
             ready = [requests[i] for i in lv.columns_at(level)]
             # bucket by (prompt length, max_new) for static shapes
@@ -77,14 +82,14 @@ class ServeEngine:
                 # child prompts extend the parent's output
                 toks = r.tokens
                 if r.parent is not None:
-                    toks = np.concatenate([requests[idx[r.parent]].tokens,
+                    toks = np.concatenate([eff[r.parent],
                                            results[r.parent], r.tokens])
-                    r.tokens = toks
+                eff[r.rid] = toks
                 buckets.setdefault((len(toks), r.max_new), []).append(r)
             for (slen, max_new), rs in buckets.items():
                 for c in range(0, len(rs), batch_size):
                     group = rs[c : c + batch_size]
-                    batch = np.stack([r.tokens for r in group])
+                    batch = np.stack([eff[r.rid] for r in group])
                     out = self.generate_batch(batch, max_new)
                     for r, o in zip(group, out):
                         r.output = o

@@ -7,6 +7,7 @@ from .gen import (
     grid_laplacian,
     ill_conditioned_jacobian,
     make_suite_matrix,
+    multi_domain_circuit,
     rc_ladder,
 )
 from .io import read_matrix_market, write_matrix_market
@@ -23,6 +24,7 @@ __all__ = [
     "grid_laplacian",
     "ill_conditioned_jacobian",
     "make_suite_matrix",
+    "multi_domain_circuit",
     "rc_ladder",
     "read_matrix_market",
     "write_matrix_market",

@@ -167,3 +167,29 @@ def test_ac_sweep_large_grid():
     assert res.max_backward_error <= 1e-10
     mag = np.abs(res.voltages[:, 4])
     assert mag[0] > mag[-1]          # low-pass grid
+
+
+def test_ac_sweep_flags_unconverged_op_point():
+    """Regression: ``ac_sweep`` used to linearize silently at whatever point
+    the starved DC Newton loop stopped at.  Now the result carries
+    ``op_converged`` and a warning fires."""
+    ckt = Circuit(2)
+    ckt.add_resistor(1, 0, 10.0)
+    ckt.add_diode(1, 0)
+    ckt.add_current_source(0, 1, 0.1)   # nonzero DC op: Newton must iterate
+    ckt.add_ac_current_source(0, 1, 1.0)
+
+    with pytest.warns(RuntimeWarning, match="operating-point Newton"):
+        starved = ac_sweep(ckt, [10.0], max_newton=1)
+    assert not starved.op_converged
+    assert starved.op_newton_iters == 1
+
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        healthy = ac_sweep(ckt, [10.0], max_newton=60)
+    assert healthy.op_converged
+    assert healthy.op_newton_iters > 1
+    # the starved linearization point really was wrong
+    assert np.abs(starved.op_point - healthy.op_point).max() > 1e-3

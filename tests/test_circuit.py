@@ -96,3 +96,66 @@ def test_assembly_pattern_reuse():
     vals1, rhs1 = ckt.assemble(v, v, 1e-3, 0.0)
     vals2, rhs2 = ckt.assemble(v + 0.1, v, 1e-3, 0.1)
     assert vals1.shape == vals2.shape == (pat.nnz,)
+
+
+def test_perturbed_copies_keep_ac_sources():
+    """Regression: ``perturbed_copies`` used to drop ``ac_isources``, so AC
+    excitation silently vanished from sweep copies."""
+    from repro.circuit.simulate import perturbed_copies
+
+    ckt = rc_grid_circuit(3, 3, with_diodes=False, seed=0)
+    ckt.add_ac_current_source(2, 0, 0.5 - 0.25j)
+    copies = perturbed_copies(ckt, [1.0, 2.0])
+    v0 = np.zeros(ckt.n)
+    freqs = [10.0, 1e3]
+    _, rhs_orig = ckt.assemble_ac(v0, freqs)
+    for c in copies:
+        assert c.ac_isources == ckt.ac_isources
+        _, rhs_copy = c.assemble_ac(v0, freqs)
+        # the excitation is scale-independent: copies reproduce it exactly
+        np.testing.assert_array_equal(rhs_copy, rhs_orig)
+    assert np.abs(rhs_orig).max() > 0
+
+
+def test_pattern_invalidated_by_post_pattern_mutation():
+    """Regression: ``Circuit.pattern()`` cached the pattern and stamp maps
+    forever, so ``add_*`` calls after the first ``pattern()`` were silently
+    ignored by ``assemble``/``assemble_ac``."""
+    ckt = Circuit(3)
+    ckt.add_resistor(1, 0, 1.0)
+    ckt.add_resistor(2, 0, 1.0)
+    pat1 = ckt.pattern()
+    v = np.zeros(ckt.n)
+    vals1, _ = ckt.assemble(v, v, 0.0, 0.0)
+
+    # every element builder must invalidate: the new resistor couples the
+    # nodes, the capacitor/diode/sources stamp values and rhs
+    ckt.add_resistor(1, 2, 2.0)
+    pat2 = ckt.pattern()
+    assert pat2.nnz > pat1.nnz
+    vals2, _ = ckt.assemble(v, v, 0.0, 0.0)
+    assert vals2.shape == (pat2.nnz,)
+    A2 = np.zeros((ckt.n, ckt.n))
+    cols = np.repeat(np.arange(ckt.n), np.diff(pat2.indptr))
+    A2[pat2.indices, cols] = vals2
+    np.testing.assert_allclose(A2, [[1.5, -0.5], [-0.5, 1.5]])
+
+    ckt.add_current_source(0, 1, 1.0)
+    _, rhs = ckt.assemble(v, v, 0.0, 0.0)
+    assert rhs[0] == 1.0
+
+    ckt.add_capacitor(2, 0, 1.0)
+    nnz_before = ckt.pattern().nnz
+    vals3, _ = ckt.assemble(v, v, 0.5, 0.0)
+    assert vals3.shape == (nnz_before,)
+    # C/dt = 2 landed on the new capacitor's diagonal
+    d11 = ckt.pattern().value_index(1, 1)
+    assert vals3[d11] == pytest.approx(1.5 + 2.0)
+
+    ckt.add_ac_current_source(2, 0, 1.0)
+    _, rhs_ac = ckt.assemble_ac(v, [10.0])
+    assert rhs_ac[0, 1] == -1.0
+
+    ckt.add_diode(1, 0)
+    vals4, _ = ckt.assemble(v, v, 0.0, 0.0)
+    assert vals4.shape == (ckt.pattern().nnz,)

@@ -1,0 +1,199 @@
+"""Adaptive refactorization ladder: escalation policy unit tests plus the
+acceptance scenario — on an ill-conditioned transient (cond >= 1e10
+generator) the ladder converges with strictly fewer full rebuilds than the
+pre-ladder always-re-scale path, and the per-rung counts land on
+``TransientResult``.
+"""
+import numpy as np
+import pytest
+
+from repro.circuit.ladder import RUNGS, LadderConfig, RefactorizationLadder
+from repro.circuit.simulate import transient
+from repro.sparse import ill_conditioned_jacobian
+from repro.sparse.csc import csc_to_dense
+
+
+# --------------------------------------------------------------------------
+# policy unit tests (no solver involved)
+# --------------------------------------------------------------------------
+
+class _FakeGLU:
+    def __init__(self, refine_converged=None, solve_info=None):
+        self.refine_converged = refine_converged
+        self.solve_info = solve_info
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        LadderConfig(check_growth="sometimes")
+    with pytest.raises(ValueError):
+        LadderConfig(max_rung=4)
+
+
+def test_rung_progression_and_kwargs():
+    ladder = RefactorizationLadder()
+    base = dict(ordering="auto", mc64="none", static_pivot=None,
+                plan_cache="default")
+    assert ladder.rung_name == "refactorize"
+    assert ladder.glu_kwargs(base) == base          # rung 0: no overrides
+
+    assert ladder.escalate(step=0, reason="r1") == "rescale"
+    kw = ladder.glu_kwargs(base)
+    assert kw["mc64"] == "scale" and kw["static_pivot"] is None
+
+    assert ladder.escalate(step=0, reason="r2") == "bump"
+    kw = ladder.glu_kwargs(base)
+    assert kw["mc64"] == "scale"
+    assert kw["static_pivot"] == ladder.config.pivot_eps
+    assert kw["plan_cache"] == "default"            # bump is still a cache hit
+
+    assert ladder.escalate(step=1, reason="r3") == "replan"
+    kw = ladder.glu_kwargs(base)
+    assert kw["plan_cache"] is None                 # replan bypasses the cache
+    assert not ladder.can_escalate()
+    with pytest.raises(RuntimeError):
+        ladder.escalate()
+
+    assert ladder.counts == {"refactorize": 0, "rescale": 1, "bump": 1,
+                             "replan": 1}
+    assert ladder.n_full_rebuilds == 3
+    assert [e["step"] for e in ladder.events] == [0, 0, 1]
+
+
+def test_bump_keeps_larger_caller_static_pivot():
+    ladder = RefactorizationLadder(LadderConfig(pivot_eps=1e-10))
+    ladder.escalate(); ladder.escalate()            # -> bump
+    kw = ladder.glu_kwargs(dict(static_pivot=1e-6))
+    assert kw["static_pivot"] == 1e-6
+
+
+def test_retry_at_current_rung_counts():
+    ladder = RefactorizationLadder()
+    ladder.escalate(step=0, reason="x")
+    ladder.retry_at_current_rung(step=3, reason="y")
+    assert ladder.counts["rescale"] == 2
+    assert ladder.n_full_rebuilds == 2
+
+
+def test_diagnose_tiers():
+    ladder = RefactorizationLadder()
+    # tier 1: non-finite solution, no glu consulted at all
+    assert ladder.diagnose(_FakeGLU(), np.array([1.0, np.nan])) is not None
+    # tier 2: refinement flag (scalar and batched)
+    assert ladder.diagnose(_FakeGLU(refine_converged=True)) is None
+    assert ladder.diagnose(_FakeGLU(refine_converged=False)) is not None
+    assert ladder.diagnose(
+        _FakeGLU(refine_converged=np.array([True, False]))) is not None
+    # tier 3: growth/min-diag only when refinement didn't run
+    healthy = dict(pivot_growth=2.0, min_diag=0.5)
+    sick = dict(pivot_growth=1e12, min_diag=0.5)
+    assert ladder.diagnose(_FakeGLU(solve_info=healthy)) is None
+    assert ladder.diagnose(_FakeGLU(solve_info=sick)) is not None
+    assert ladder.diagnose(
+        _FakeGLU(solve_info=dict(pivot_growth=2.0, min_diag=0.0))) is not None
+    # check_growth="never" skips tier 3; "always" applies it after refinement
+    never = RefactorizationLadder(LadderConfig(check_growth="never"))
+    assert never.diagnose(_FakeGLU(solve_info=sick)) is None
+    always = RefactorizationLadder(LadderConfig(check_growth="always"))
+    assert always.diagnose(
+        _FakeGLU(refine_converged=True, solve_info=sick)) is not None
+
+
+# --------------------------------------------------------------------------
+# acceptance: ill-conditioned transient, ladder vs always-re-scale
+# --------------------------------------------------------------------------
+
+class _LinearStubCircuit:
+    """Duck-typed circuit: a FIXED linear system ``A v = b`` every step —
+    the minimal harness that drives ``transient``'s Newton/escalation
+    machinery on the robustness generator matrices."""
+
+    def __init__(self, A, b):
+        self._pat = A
+        self._vals = np.asarray(A.data, dtype=np.float64)
+        self._b = np.asarray(b, dtype=np.float64)
+        self.n = A.n
+
+    def pattern(self):
+        return self._pat
+
+    def assemble(self, v, v_prev, dt, t):
+        return self._vals.copy(), self._b.copy()
+
+
+@pytest.fixture(scope="module")
+def hard_transient():
+    # cond >= 1e10 with crushed pivots: unscaled no-pivot LU stalls
+    # iterative refinement, a fresh MC64 scaling repairs it
+    A = ill_conditioned_jacobian(200, decades=12.0, tiny_pivots=8, seed=3)
+    assert np.linalg.cond(csc_to_dense(A)) >= 1e10
+    b = np.random.default_rng(5).standard_normal(A.n)
+    return A, b
+
+
+def test_ladder_beats_always_rescale_on_ill_conditioned_transient(hard_transient):
+    """Both runs start from the same degraded configuration (no scaling).
+    The pre-ladder policy rebuilds with the SAME configuration once per
+    step — it never recovers and pays a rebuild every step.  The ladder
+    climbs to the re-scale rung once, stays there (sticky), and converges."""
+    A, b = hard_transient
+    stub = _LinearStubCircuit(A, b)
+    steps = 6
+    kwargs = dict(t_end=float(steps), dt=1.0, refine=2, mc64="none",
+                  newton_tol=1e-8)
+
+    legacy = transient(stub, escalation="rescale", **kwargs)
+    ladder = transient(stub, escalation="ladder", **kwargs)
+
+    # the blunt path rebuilt every step and still never met tolerance
+    assert legacy.n_rescalings == steps
+    # the ladder escalated once to the re-scale rung and recovered
+    assert ladder.ladder_counts["rescale"] == 1
+    assert ladder.ladder_counts["bump"] == 0
+    assert ladder.ladder_counts["replan"] == 0
+    assert ladder.n_full_rebuilds == 1
+    # strictly fewer full rebuilds than the always-re-scale path
+    assert ladder.n_full_rebuilds < legacy.n_rescalings
+    # and it actually converged: the solution solves the original system
+    x = ladder.voltages[-1]
+    denom = np.abs(A.to_scipy()) @ np.abs(x) + np.abs(b)
+    berr = float((np.abs(A.to_scipy() @ x - b) / denom).max())
+    assert berr <= 1e-12
+    assert np.isfinite(ladder.voltages).all()
+
+
+def test_ladder_silent_on_healthy_transient():
+    from repro.circuit import rc_grid_circuit
+
+    ckt = rc_grid_circuit(4, 4, with_diodes=True, seed=2)
+    res = transient(ckt, t_end=0.02, dt=0.005, refine=1)
+    assert res.n_full_rebuilds == 0
+    assert res.ladder_counts["rescale"] == 0
+    assert res.n_factorizations == res.newton_iters.sum()
+    assert res.ladder_counts["refactorize"] == res.n_factorizations
+
+
+def test_escalation_none_never_rebuilds(hard_transient):
+    A, b = hard_transient
+    stub = _LinearStubCircuit(A, b)
+    res = transient(stub, t_end=2.0, dt=1.0, refine=2, mc64="none",
+                    escalation="none")
+    assert res.n_rescalings == 0 and res.n_full_rebuilds == 0
+
+
+def test_unknown_escalation_rejected(hard_transient):
+    A, b = hard_transient
+    with pytest.raises(ValueError):
+        transient(_LinearStubCircuit(A, b), t_end=1.0, dt=1.0,
+                  escalation="bogus")
+
+
+def test_ladder_counts_reported_on_sweep():
+    from repro.circuit import rc_grid_circuit
+    from repro.circuit.simulate import transient_sweep
+
+    ckt = rc_grid_circuit(3, 3, with_diodes=False, seed=1)
+    res = transient_sweep(ckt, t_end=0.01, dt=0.005, scales=[0.9, 1.1],
+                          refine=1)
+    assert set(res.ladder_counts) == set(RUNGS)
+    assert res.n_full_rebuilds == 0

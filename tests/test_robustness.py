@@ -321,3 +321,80 @@ def test_refinement_float32_improves():
     g = GLU(A, dtype=jnp.float32, refine=4)
     g.factorize().solve(b)
     assert g.solve_info["backward_error"] <= 4 * np.finfo(np.float32).eps
+
+
+# --------------------------------------------------------------------------
+# chunked refinement: no per-sweep device->host sync
+# --------------------------------------------------------------------------
+
+def test_refined_solve_single_sync_in_common_case(monkeypatch):
+    """Regression (perf): refinement used to force one device->host sync per
+    sweep.  The common k<=2 case must now pay exactly ONE transfer, counted
+    both by the returned ``host_syncs`` and by intercepting the actual
+    ``jax.device_get`` calls."""
+    import jax
+
+    A = circuit_jacobian(150, avg_degree=4.0, seed=9)
+    glu = GLU(A, refine=2).factorize()
+    b = np.random.default_rng(1).standard_normal(A.n)
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.extend([1]) or real(x))
+    x = glu.solve(b)
+    monkeypatch.undo()
+
+    info = glu.solve_info
+    assert info["converged"]
+    assert info["host_syncs"] == 1
+    # one berr/iters transfer inside refinement; the only other device_get
+    # is the final np.asarray(x) (which goes through jnp, not device_get)
+    assert len(calls) == 1
+    assert glu.residual(b, x) < 1e-10
+
+
+def test_refined_solve_sync_count_scales_with_chunks():
+    """tol=0 can never be met, so max_iter sweeps all run: with the default
+    sync_every=2 that is ceil(max_iter / 2) transfers — not max_iter."""
+    A = circuit_jacobian(120, avg_degree=4.0, seed=10)
+    glu = GLU(A, refine=5, refine_tol=0.0).factorize()
+    b = np.random.default_rng(2).standard_normal(A.n)
+    glu.solve(b)
+    info = glu.solve_info
+    assert not info["converged"]
+    assert info["refine_iters"] == 5           # every sweep was applied
+    assert info["host_syncs"] == 3             # chunks of 2, 2, 1
+
+
+def test_refined_batched_sync_and_masking():
+    """Batched refinement: converged rows stop accumulating iterations (the
+    device-side mask) while the whole batch still costs one sync per chunk."""
+    A = circuit_jacobian(100, avg_degree=4.0, seed=11)
+    rng = np.random.default_rng(3)
+    B = 3
+    batch = np.asarray(A.data)[None, :] * (
+        1.0 + 0.01 * rng.uniform(-1, 1, size=(B, A.nnz)))
+    b = rng.standard_normal((B, A.n))
+    glu = GLU(A, refine=2)
+    glu.refactorize_solve(batch, b)
+    info = glu.solve_info
+    assert np.asarray(info["converged"]).all()
+    assert info["host_syncs"] == 1
+    assert np.asarray(info["refine_iters"]).shape == (B,)
+    assert np.asarray(info["backward_error"]).max() <= glu.refine_tol
+
+
+def test_refined_masked_iters_match_early_stop_semantics():
+    """``refine_iters`` counts only sweeps applied while still above
+    tolerance — identical numbers to the old sync-per-sweep early-stop."""
+    A = ill_conditioned_jacobian(150, decades=10.0, seed=4)
+    glu = GLU(A, refine=4).factorize()
+    b = np.random.default_rng(4).standard_normal(A.n)
+    x = glu.solve(b)
+    info = glu.solve_info
+    assert info["converged"]
+    assert 0 <= info["refine_iters"] <= 4
+    # a converged solve re-run with a larger budget must not iterate more
+    glu2 = GLU(A, refine=8).factorize()
+    glu2.solve(b)
+    assert glu2.solve_info["refine_iters"] == info["refine_iters"]

@@ -1,0 +1,87 @@
+"""Request-scheduler contracts that don't need model weights: dependency
+ordering, prompt splicing without caller-visible mutation, and idempotent
+re-runs (tier-1 twin of the slow end-to-end tests in test_serving.py)."""
+import numpy as np
+
+from repro.serving import Request, ServeEngine
+
+
+class _StubEngine(ServeEngine):
+    """ServeEngine with generation stubbed out: the 'model' echoes a
+    deterministic function of the prompt so splicing errors are visible in
+    the outputs, and every batch call is recorded."""
+
+    def __init__(self):
+        self.calls = []
+
+    def generate_batch(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        self.calls.append(np.array(prompts, copy=True))
+        base = prompts.sum(axis=1, keepdims=True).astype(np.int64)
+        return (base + np.arange(1, max_new + 1)[None, :]).astype(np.int32)
+
+
+def _requests():
+    return [
+        Request(rid=0, tokens=np.arange(1, 9, dtype=np.int32), max_new=4),
+        Request(rid=1, tokens=np.arange(20, 28, dtype=np.int32), max_new=4),
+        Request(rid=2, tokens=np.arange(50, 54, dtype=np.int32), max_new=4,
+                parent=0),
+        Request(rid=3, tokens=np.arange(60, 64, dtype=np.int32), max_new=4,
+                parent=2),
+    ]
+
+
+def test_scheduler_does_not_mutate_requests():
+    eng = _StubEngine()
+    reqs = _requests()
+    before = [r.tokens.copy() for r in reqs]
+    results = eng.run(reqs, batch_size=2)
+    assert set(results) == {0, 1, 2, 3}
+    for r, orig in zip(reqs, before):
+        np.testing.assert_array_equal(r.tokens, orig)
+
+
+def test_scheduler_rerun_is_idempotent():
+    """Re-running the scheduler on the SAME request list must reproduce the
+    first run exactly — the old in-place splice double-prepended the parent
+    prompt on every re-run."""
+    eng = _StubEngine()
+    reqs = _requests()
+    first = eng.run(reqs, batch_size=2)
+    prompts_first = [c.shape for c in eng.calls]
+    second = eng.run(reqs, batch_size=2)
+    prompts_second = [c.shape for c in eng.calls[len(prompts_first):]]
+    assert prompts_first == prompts_second
+    for rid in first:
+        np.testing.assert_array_equal(first[rid], second[rid])
+
+
+def test_child_sees_parent_context():
+    """The spliced prompt (parent effective prompt + parent output + own
+    tokens) is what reaches generate_batch, including for grandchildren."""
+    eng = _StubEngine()
+    reqs = _requests()
+    results = eng.run(reqs, batch_size=2)
+    by_len = {c.shape[1]: c for c in eng.calls}
+    # child 2: 8 (parent prompt) + 4 (parent output) + 4 (own) = 16
+    assert 16 in by_len
+    child = by_len[16][0]
+    np.testing.assert_array_equal(child[:8], reqs[0].tokens)
+    np.testing.assert_array_equal(child[8:12], results[0])
+    np.testing.assert_array_equal(child[12:], reqs[2].tokens)
+    # grandchild 3: 16 (child effective) + 4 (child output) + 4 (own) = 24
+    assert 24 in by_len
+    grand = by_len[24][0]
+    np.testing.assert_array_equal(grand[:8], reqs[0].tokens)
+    np.testing.assert_array_equal(grand[8:12], results[0])
+    np.testing.assert_array_equal(grand[12:16], reqs[2].tokens)
+    np.testing.assert_array_equal(grand[16:20], results[2])
+    np.testing.assert_array_equal(grand[20:], reqs[3].tokens)
+
+
+def test_independent_requests_batch_together():
+    eng = _StubEngine()
+    reqs = [Request(rid=i, tokens=np.arange(8, dtype=np.int32), max_new=2)
+            for i in range(4)]
+    eng.run(reqs, batch_size=4)
+    assert len(eng.calls) == 1 and eng.calls[0].shape == (4, 8)

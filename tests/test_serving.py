@@ -55,5 +55,13 @@ def test_dependency_scheduling(engine):
     ]
     results = eng.run(reqs, batch_size=2)
     assert set(results) == {0, 1, 2}
-    # the child's prompt was extended by the parent's output
-    assert len(reqs[2].tokens) == 8 + 4 + 4
+    # splicing the parent's output into the child's prompt must NOT mutate
+    # the caller's request object
+    assert len(reqs[2].tokens) == 4
+    # and a second run on the same list is identical (idempotent): the old
+    # in-place splice double-prepended the parent prompt on re-run
+    again = eng.run(reqs, batch_size=2)
+    assert set(again) == {0, 1, 2}
+    for rid in (0, 1, 2):
+        np.testing.assert_array_equal(results[rid], again[rid])
+    assert len(reqs[2].tokens) == 4

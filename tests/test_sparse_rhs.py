@@ -1,0 +1,219 @@
+"""Sparse-RHS triangular solves: reach-closure pruning of the level
+schedule (Gilbert-Peierls; cf. Ruipeng Li, arXiv 1710.04985) and the
+many-RHS batched trisolve.
+
+Contracts:
+
+* the pruned schedule is BIT-identical to the full solve (every kept
+  operation is the same floating-point operation; every dropped one would
+  have contributed an exact zero),
+* the full solve itself matches the sequential ``trisolve_numpy`` oracle,
+* reach closures are genuine closures (supersets of the seeds, fixed
+  points under another expansion),
+* ``solve_multi`` equals K independent single solves bitwise,
+* the GLU facade validates patterns and maps them through the row
+  permutation correctly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GLU
+from repro.core.plan import reach_closure
+from repro.core.triangular import trisolve_numpy
+from repro.sparse import circuit_jacobian
+from repro.sparse.csc import CSC
+
+
+@pytest.fixture(scope="module")
+def factored():
+    A = circuit_jacobian(300, avg_degree=4.5, seed=11)
+    glu = GLU(A).factorize()
+    return glu
+
+
+def _one_hot(n, idx, val=1.0):
+    b = np.zeros(n)
+    b[np.asarray(idx)] = val
+    return b
+
+
+# --------------------------------------------------------------------------
+# reach closure machinery
+# --------------------------------------------------------------------------
+
+def test_reach_closure_basic():
+    # chain 0 -> 1 -> 2 and isolated 3: adjacency col j -> rows below
+    adj_ptr = np.array([0, 1, 2, 2, 2], dtype=np.int64)
+    adj_rows = np.array([1, 2], dtype=np.int64)
+    np.testing.assert_array_equal(reach_closure(4, adj_ptr, adj_rows, [0]),
+                                  [0, 1, 2])
+    np.testing.assert_array_equal(reach_closure(4, adj_ptr, adj_rows, [3]),
+                                  [3])
+    np.testing.assert_array_equal(reach_closure(4, adj_ptr, adj_rows, []),
+                                  [])
+    with pytest.raises(ValueError):
+        reach_closure(4, adj_ptr, adj_rows, [4])
+    with pytest.raises(ValueError):
+        reach_closure(4, adj_ptr, adj_rows, [-1])
+
+
+def test_plan_reaches_are_closures(factored):
+    plan = factored.plan
+    seeds = np.array([5, 40, 123])
+    fr = plan.fwd_reach(seeds)
+    # superset of the seeds, sorted, and a fixed point
+    assert set(seeds) <= set(fr)
+    assert np.all(np.diff(fr) > 0)
+    np.testing.assert_array_equal(plan.fwd_reach(fr), fr)
+    br = plan.bwd_reach(fr)
+    assert set(fr) <= set(br)
+    np.testing.assert_array_equal(plan.bwd_reach(br), br)
+
+
+# --------------------------------------------------------------------------
+# pruned == full, bit for bit; full == numpy oracle
+# --------------------------------------------------------------------------
+
+def test_full_solve_matches_numpy_oracle(factored):
+    n = factored.n
+    vals = np.asarray(factored.factorized_values())
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(n)
+    ours = np.asarray(factored._solver.solve(factored.factorized_values(), b))
+    oracle = trisolve_numpy(factored.plan, vals, b)
+    np.testing.assert_allclose(ours, oracle, rtol=1e-12, atol=1e-14)
+
+
+@pytest.mark.parametrize("pattern", [[0], [17], [3, 200, 250], range(0, 300, 7)])
+def test_pruned_solve_bit_identical(factored, pattern):
+    n = factored.n
+    solver = factored._solver
+    vals = factored.factorized_values()
+    rng = np.random.default_rng(1)
+    b = _one_hot(n, list(pattern), rng.standard_normal(len(list(pattern))))
+    full = np.asarray(solver.solve(vals, b))
+    pruned = np.asarray(solver.solve(vals, b, rhs_pattern=list(pattern)))
+    # exact bitwise agreement on the reach AND off it (both exact zeros;
+    # array_equal treats -0.0 == 0.0)
+    assert np.array_equal(full, pruned)
+    _, _, freach, breach = solver.schedule_for_pattern(list(pattern))
+    off = np.setdiff1d(np.arange(n), breach)
+    assert np.all(pruned[off] == 0.0)
+
+
+def test_pruned_full_pattern_is_full_solve(factored):
+    n = factored.n
+    solver = factored._solver
+    vals = factored.factorized_values()
+    b = np.random.default_rng(2).standard_normal(n)
+    full = np.asarray(solver.solve(vals, b))
+    pruned = np.asarray(solver.solve(vals, b, rhs_pattern=np.arange(n)))
+    assert np.array_equal(full, pruned)
+
+
+def test_sparse_schedule_cached(factored):
+    solver = factored._solver
+    solver._sparse_schedules.clear()
+    e1 = solver.schedule_for_pattern([4, 9])
+    e2 = solver.schedule_for_pattern(np.array([9, 4, 4]))  # normalized key
+    assert e1 is e2
+    assert len(solver._sparse_schedules) == 1
+    # LRU eviction keeps the cache bounded
+    for i in range(solver.SPARSE_SCHEDULE_CAP + 5):
+        solver.schedule_for_pattern([i])
+    assert len(solver._sparse_schedules) <= solver.SPARSE_SCHEDULE_CAP
+
+
+# --------------------------------------------------------------------------
+# many-RHS solve_multi
+# --------------------------------------------------------------------------
+
+def test_solve_multi_matches_single(factored):
+    n = factored.n
+    solver = factored._solver
+    vals = factored.factorized_values()
+    B = np.random.default_rng(3).standard_normal((6, n))
+    multi = np.asarray(solver.solve_multi(vals, B))
+    for k in range(6):
+        single = np.asarray(solver.solve(vals, B[k]))
+        assert np.array_equal(multi[k], single)
+
+
+def test_solve_multi_pruned_union_pattern(factored):
+    n = factored.n
+    solver = factored._solver
+    vals = factored.factorized_values()
+    pat = [2, 77, 140]
+    B = np.zeros((3, n))
+    for k, j in enumerate(pat):
+        B[k, j] = 1.0
+    full = np.asarray(solver.solve_multi(vals, B))
+    pruned = np.asarray(solver.solve_multi(vals, B, rhs_pattern=pat))
+    assert np.array_equal(full, pruned)
+
+
+def test_solve_multi_shape_validation(factored):
+    with pytest.raises(ValueError):
+        factored._solver.solve_multi(factored.factorized_values(),
+                                     np.zeros(factored.n))
+
+
+# --------------------------------------------------------------------------
+# GLU facade: permutation mapping + validation
+# --------------------------------------------------------------------------
+
+def test_glu_solve_rhs_pattern_matches_full():
+    A = circuit_jacobian(250, avg_degree=4.0, seed=5)
+    glu = GLU(A).factorize()
+    b = _one_hot(A.n, [12], 2.5)
+    x_full = glu.solve(b)
+    x_pruned = glu.solve(b, rhs_pattern=[12])
+    assert np.array_equal(x_full, x_pruned)
+    assert glu.residual(b, x_pruned) < 1e-12
+    # refined path: pruned initial solve, full-schedule corrections
+    x_ref = glu.solve(b, refine=2, rhs_pattern=[12])
+    assert glu.residual(b, x_ref) < 1e-12
+    assert glu.solve_info["converged"]
+
+
+def test_glu_solve_multi_end_to_end():
+    A = circuit_jacobian(200, avg_degree=4.0, seed=6)
+    glu = GLU(A).factorize()
+    K = 5
+    seeds = [3, 50, 120, 7, 199]
+    B = np.zeros((K, A.n))
+    for k, j in enumerate(seeds):
+        B[k, j] = 1.0
+    X = glu.solve_multi(B, rhs_pattern=seeds)
+    A_sp = A.to_scipy()
+    for k in range(K):
+        r = np.abs(A_sp @ X[k] - B[k]).max()
+        assert r < 1e-10
+        assert np.array_equal(X[k], glu.solve(B[k]))
+    # refined many-RHS path
+    X_ref = glu.solve_multi(B, refine=2)
+    info = glu.solve_info
+    assert np.asarray(info["converged"]).all()
+    assert np.asarray(info["backward_error"]).shape == (K,)
+
+
+def test_glu_rhs_pattern_validation():
+    A = circuit_jacobian(60, avg_degree=3.5, seed=7)
+    glu = GLU(A).factorize()
+    b = _one_hot(A.n, [4, 9])
+    with pytest.raises(ValueError):                 # b nonzero outside pattern
+        glu.solve(b, rhs_pattern=[4])
+    with pytest.raises(ValueError):                 # out of range
+        glu.solve(b, rhs_pattern=[4, 9, A.n])
+    x = glu.solve(b, rhs_pattern=[4, 9])            # exact support is fine
+    assert glu.residual(b, x) < 1e-10
+
+
+def test_glu_pattern_maps_through_row_permutation():
+    """The facade translates original-row patterns to permuted positions:
+    a matrix with a non-trivial MC64 row permutation must still give the
+    bit-identical pruned solve."""
+    A = circuit_jacobian(150, avg_degree=4.0, seed=8)
+    glu = GLU(A, mc64="scale").factorize()
+    b = _one_hot(A.n, [33])
+    assert np.array_equal(glu.solve(b), glu.solve(b, rhs_pattern=[33]))
