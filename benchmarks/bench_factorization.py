@@ -54,7 +54,9 @@ def main():
                 f"{t_ll / t_glu3:.1f}")
         print(line, flush=True)
         row(f"factorize_{name}", t_glu3 * 1e6,
-            f"n={A.n} levels={lv.num_levels} speedup_vs_GP={t_ll/t_glu3:.1f}x")
+            f"n={A.n} levels={lv.num_levels} groups={fx.n_groups} "
+            f"dispatches={fx.last_n_dispatches} "
+            f"speedup_vs_GP={t_ll/t_glu3:.1f}x")
         out.append({"matrix": name, "glu3_s": t_glu3, "leftlook_s": t_ll,
                     "rightlook_s": t_rl, "scipy_s": t_sp})
     sp = [o["leftlook_s"] / o["glu3_s"] for o in out]

@@ -34,18 +34,23 @@ def main():
             "glu3": dict(),
             "case1_noflat": dict(disable_modes=(MODE_FLAT,)),
             "case2_nopanel": dict(disable_modes=(MODE_PANEL,)),
-            "case3_nofuse": dict(fuse_levels=False),
+            "case3_nofuse": dict(fuse_levels=False, jit_schedule=False),
         }
         times = {}
+        shape = {}
         for vname, kw in variants.items():
             fx = JaxFactorizer(plan, dtype=jnp.float64, **kw)
             t, _ = timeit(lambda fx=fx: fx.factorize(a_data).block_until_ready())
             times[vname] = t * 1e3
+            shape[vname] = (fx.n_groups, fx.last_n_dispatches)
         line = (f"{name},{times['glu3']:.1f},{times['case1_noflat']:.1f},"
                 f"{times['case2_nopanel']:.1f},{times['case3_nofuse']:.1f},"
                 f"{counts[MODE_FLAT]},{counts[MODE_SEGMENTED]},{counts[MODE_PANEL]}")
         print(line, flush=True)
+        g, d = shape["glu3"]
         row(f"modes_{name}", times["glu3"] * 1e3,
+            f"groups={g} dispatches={d} "
+            f"nofuse_dispatches={shape['case3_nofuse'][1]} "
             f"nofuse_slowdown={times['case3_nofuse']/times['glu3']:.2f}x")
         out.append({"matrix": name, **times, "counts": counts})
     return out

@@ -1,0 +1,104 @@
+"""Perf-trajectory diff between two committed benchmark artifacts.
+
+Usage:
+    python -m benchmarks.diff BENCH_PR6.json BENCH_PR7.json
+    python -m benchmarks.diff --latest .          # two newest BENCH_PR*.json
+
+Compares rows by name and fails (exit 1) when any ``factorize_*`` row of the
+newer artifact regresses by more than ``--threshold`` (default 1.3x) against
+the older one.  Other rows are reported informationally — they carry too
+much machine-to-machine noise to gate on, while the factorize rows are the
+repo's headline numbers and the ones every PR is expected to protect.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+GATED_PREFIX = "factorize_"
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def find_latest_pair(directory: str):
+    """The two highest-numbered BENCH_PR<N>.json files in ``directory``."""
+    pat = re.compile(r"BENCH_PR(\d+)\.json$")
+    found = []
+    for p in Path(directory).iterdir():
+        m = pat.match(p.name)
+        if m:
+            found.append((int(m.group(1)), str(p)))
+    if len(found) < 2:
+        return None
+    found.sort()
+    return found[-2][1], found[-1][1]
+
+
+def diff(old_path: str, new_path: str, threshold: float = 1.3) -> int:
+    old = load_rows(old_path)
+    new = load_rows(new_path)
+    failures = []
+    print(f"# perf diff: {old_path} -> {new_path} "
+          f"(gate: {GATED_PREFIX}* > {threshold:.2f}x)")
+    print("name,old_us,new_us,ratio,gated,status")
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None or n is None:
+            ou = "-" if o is None else format(o["us_per_call"], ".1f")
+            nu = "-" if n is None else format(n["us_per_call"], ".1f")
+            gated = "yes" if name.startswith(GATED_PREFIX) else "no"
+            print(f"{name},{ou},{nu},-,{gated},"
+                  f"{'added' if o is None else 'removed'}")
+            continue
+        ou, nu = o["us_per_call"], n["us_per_call"]
+        ratio = nu / ou if ou > 0 else float("inf")
+        gated = name.startswith(GATED_PREFIX)
+        status = "ok"
+        if gated and ratio > threshold:
+            status = "REGRESSION"
+            failures.append((name, ratio))
+        print(f"{name},{ou:.1f},{nu:.1f},{ratio:.2f}x,"
+              f"{'yes' if gated else 'no'},{status}")
+    if failures:
+        print(f"# FAIL: {len(failures)} gated row(s) regressed beyond "
+              f"{threshold:.2f}x:", file=sys.stderr)
+        for name, ratio in failures:
+            print(f"#   {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print("# OK: no gated regression")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="benchmarks.diff")
+    parser.add_argument("artifacts", nargs="*",
+                        help="OLD.json NEW.json (exactly two)")
+    parser.add_argument("--latest", metavar="DIR", default=None,
+                        help="diff the two highest-numbered BENCH_PR*.json "
+                             "in DIR instead of naming files")
+    parser.add_argument("--threshold", type=float, default=1.3,
+                        help="max allowed new/old ratio on gated rows "
+                             "(default 1.3)")
+    args = parser.parse_args(argv)
+    if args.latest is not None:
+        pair = find_latest_pair(args.latest)
+        if pair is None:
+            print("# fewer than two BENCH_PR*.json artifacts; nothing to diff")
+            return 0
+        old_path, new_path = pair
+    elif len(args.artifacts) == 2:
+        old_path, new_path = args.artifacts
+    else:
+        parser.error("pass OLD.json NEW.json or --latest DIR")
+    return diff(old_path, new_path, args.threshold)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

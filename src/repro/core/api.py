@@ -82,12 +82,16 @@ class GLU:
         dtype=jnp.float64,
         mc64="scale",
         fuse_levels: bool = True,
+        fuse_buckets: bool = True,
+        bucket_waste: float = 4.0,
+        jit_schedule: bool = True,
+        executable_cache="default",
         use_pallas: bool = False,
         panel_threshold: int = 16,
         static_pivot: Optional[float] = None,
         refine: int = 0,
         refine_tol: Optional[float] = None,
-        dense_tail: bool = False,
+        dense_tail: bool = True,
         dense_tail_density: float = 0.25,
         mode_override: Optional[str] = None,
         interpret: bool = True,
@@ -111,13 +115,29 @@ class GLU:
         :class:`~repro.core.planner.PlanCache`, or ``None`` to always
         rebuild.  ``plan_from_cache`` reports whether construction reused a
         cached plan (and therefore did zero symbolic work).
+
+        ``jit_schedule``/``executable_cache``: the whole-schedule executors —
+        one jitted program per (plan digest, executor config), cached
+        process-wide so a second GLU on the same plan compiles nothing; a
+        (re)factorization or triangular solve is then ONE device dispatch
+        (``solve_info["n_dispatches"]`` / ``["solve_dispatches"]``).
+        ``fuse_buckets``/``bucket_waste`` control the bucketed ragged level
+        fusion feeding those programs.
+
+        ``dense_tail``: switch-to-dense is ON by default — a dense-enough
+        trailing column block finishes as one blocked dense-LU group inside
+        the fused program instead of hundreds of tiny scatter levels (no-op
+        when no qualifying tail exists; ``dense_tail=False`` forces the
+        strictly sparse schedule).
         """
         plan, scaling, from_cache = plan_factorization(
             A, ordering=ordering, symbolic=symbolic, mc64=mc64,
             panel_threshold=panel_threshold, cache=plan_cache)
         self._setup(
             plan, scaling, A, from_cache=from_cache, dtype=dtype,
-            fuse_levels=fuse_levels, use_pallas=use_pallas,
+            fuse_levels=fuse_levels, fuse_buckets=fuse_buckets,
+            bucket_waste=bucket_waste, jit_schedule=jit_schedule,
+            executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
             mode_override=mode_override, interpret=interpret)
@@ -130,11 +150,15 @@ class GLU:
         dtype=jnp.float64,
         mc64="scale",
         fuse_levels: bool = True,
+        fuse_buckets: bool = True,
+        bucket_waste: float = 4.0,
+        jit_schedule: bool = True,
+        executable_cache="default",
         use_pallas: bool = False,
         static_pivot: Optional[float] = None,
         refine: int = 0,
         refine_tol: Optional[float] = None,
-        dense_tail: bool = False,
+        dense_tail: bool = True,
         dense_tail_density: float = 0.25,
         mode_override: Optional[str] = None,
         interpret: bool = True,
@@ -158,7 +182,9 @@ class GLU:
         self = cls.__new__(cls)
         self._setup(
             plan, scaling, A, from_cache=True, dtype=dtype,
-            fuse_levels=fuse_levels, use_pallas=use_pallas,
+            fuse_levels=fuse_levels, fuse_buckets=fuse_buckets,
+            bucket_waste=bucket_waste, jit_schedule=jit_schedule,
+            executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
             mode_override=mode_override, interpret=interpret)
@@ -172,6 +198,10 @@ class GLU:
         from_cache: bool,
         dtype,
         fuse_levels: bool,
+        fuse_buckets: bool,
+        bucket_waste: float,
+        jit_schedule: bool,
+        executable_cache,
         use_pallas: bool,
         static_pivot: Optional[float],
         refine: int,
@@ -213,11 +243,16 @@ class GLU:
         self.plan = plan.fplan
         self._factorizer = JaxFactorizer(
             self.plan, dtype=dtype, fuse_levels=fuse_levels,
+            fuse_buckets=fuse_buckets, bucket_waste=bucket_waste,
+            jit_schedule=jit_schedule, executable_cache=executable_cache,
             use_pallas=use_pallas, mode_override=mode_override,
             interpret=interpret, dense_tail=dense_tail,
             dense_tail_density=dense_tail_density, static_pivot=static_pivot,
         )
-        self._solver = JaxTriangularSolver(self.plan)
+        self._solver = JaxTriangularSolver(
+            self.plan, fuse=fuse_levels, fuse_buckets=fuse_buckets,
+            bucket_waste=bucket_waste, jit_schedule=jit_schedule,
+            executable_cache=executable_cache)
         self._vals: Optional[jnp.ndarray] = None
         self._vals_batch: Optional[jnp.ndarray] = None
         self._a_vals: Optional[jnp.ndarray] = None
@@ -458,13 +493,22 @@ class GLU:
             "refine_iters": None,
             "backward_error": None,
             "converged": None,
+            # executor shape: how many schedule groups the plan compiled to
+            # and how many device dispatches this factorization actually
+            # issued (1 on the fused whole-schedule path)
+            "n_groups": self._factorizer.n_groups,
+            "n_dispatches": self._factorizer.last_n_dispatches,
+            "solve_dispatches": None,
         }
 
     def _set_solve_info(self, rinfo: dict) -> None:
         if self._info is None:
             self._info = {"batched": False, "pivot_growth": None,
-                          "min_diag": None, "n_perturbed": None}
+                          "min_diag": None, "n_perturbed": None,
+                          "n_groups": self._factorizer.n_groups,
+                          "n_dispatches": None}
         self._info.update(rinfo)
+        self._info["solve_dispatches"] = self._solver.last_n_dispatches
 
     @property
     def refine_converged(self):

@@ -1,0 +1,123 @@
+"""Process-wide cache of whole-schedule jitted executables.
+
+The single-dispatch executors (:class:`~repro.core.factorize.JaxFactorizer`
+and :class:`~repro.core.triangular.JaxTriangularSolver`) compile one XLA
+program per schedule — scatter plus every level group in one device
+dispatch.  Those programs are expensive to build and independent of the
+executor *instance*: two ``GLU`` objects on the same symbolic plan (a
+Newton re-scaling rebuild, a sweep corner, a second serving tenant) run
+byte-identical schedules.  This cache keys the jitted callables by
+
+  (executor kind, plan digest, entry point, batched, group-kind tuple,
+   dtype, robust, use_pallas, interpret, ...)
+
+so the second construction compiles nothing: it reuses the same callable
+object, whose ``jax.jit`` cache already holds the compiled executable for
+the schedule's array shapes.  It is the executable-level sibling of the
+symbolic :class:`~repro.core.planner.PlanCache` — plans deduplicate host
+preprocessing, this deduplicates device compilation.
+
+Eviction drops the callable (and with it the compiled XLA program); a
+subsequent request rebuilds and recompiles.  The default capacity is far
+above any realistic number of live (plan, config) pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Hashable
+
+__all__ = [
+    "ExecutableCache",
+    "ExecutableCacheStats",
+    "default_executable_cache",
+    "set_default_executable_cache",
+]
+
+
+@dataclasses.dataclass
+class ExecutableCacheStats:
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0
+    evictions: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ExecutableCache:
+    """LRU of whole-schedule jitted callables, keyed by hashable tuples."""
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._fns: OrderedDict[Hashable, Callable] = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = ExecutableCacheStats()
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Callable]):
+        """The cached callable for ``key``, building (and caching) it via
+        ``builder()`` on a miss."""
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self._fns.move_to_end(key)
+                self.stats.hits += 1
+                return fn
+            self.stats.misses += 1
+        fn = builder()             # build outside the lock (it may trace)
+        with self._lock:
+            existing = self._fns.get(key)
+            if existing is not None:    # racing builder won; keep its fn
+                self._fns.move_to_end(key)
+                return existing
+            self.stats.builds += 1
+            self._fns[key] = fn
+            while len(self._fns) > self.capacity:
+                self._fns.popitem(last=False)
+                self.stats.evictions += 1
+            return fn
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._fns
+
+
+_default_cache = ExecutableCache()
+
+
+def default_executable_cache() -> ExecutableCache:
+    """The process-wide cache the executors use by default."""
+    return _default_cache
+
+
+def set_default_executable_cache(cache: ExecutableCache) -> ExecutableCache:
+    """Swap the process-wide default cache; returns the previous one."""
+    global _default_cache
+    old = _default_cache
+    _default_cache = cache
+    return old
+
+
+def resolve_executable_cache(cache):
+    """``"default"`` -> the process-wide cache; ``None`` -> no caching
+    (a private throwaway cache); an :class:`ExecutableCache` passes
+    through."""
+    if cache == "default":
+        return _default_cache
+    if cache is None:
+        return ExecutableCache()
+    if isinstance(cache, ExecutableCache):
+        return cache
+    raise TypeError(
+        f"executable_cache must be an ExecutableCache, 'default' or None, "
+        f"got {cache!r}")

@@ -22,7 +22,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .plan import MODE_FLAT, MODE_PANEL, MODE_SEGMENTED, FactorizePlan
+from .executor import resolve_executable_cache
+from .plan import (
+    MODE_FLAT,
+    MODE_PANEL,
+    MODE_SEGMENTED,
+    FactorizePlan,
+    bucketize,
+    pow2_pad,
+)
 from .symbolic import FilledPattern
 
 __all__ = ["factorize_numpy", "leftlooking_numpy", "JaxFactorizer", "split_lu"]
@@ -144,8 +152,7 @@ def _pad_to(x: np.ndarray, size: int, fill: int) -> np.ndarray:
     return out
 
 
-def _pow2(x: int, lo: int = 8) -> int:
-    return max(lo, 1 << (int(x - 1).bit_length())) if x > 0 else lo
+_pow2 = pow2_pad
 
 
 def _level_step_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
@@ -197,18 +204,25 @@ _scan_steps_robust = partial(jax.jit, donate_argnums=(0,))(_scan_steps_robust_bo
 
 # Batched twins: vals carries a leading batch axis (B, nnz); the per-level
 # index arrays are shared across the batch, so each group is still ONE
-# device dispatch for the whole batch.
+# device dispatch for the whole batch.  The un-jitted ``*_body`` vmaps are
+# reused inside the whole-schedule fused program.
 _IN_AXES = (0, None, None, None, None, None)
+_level_step_batched_body = jax.vmap(_level_step_body, in_axes=_IN_AXES)
+_scan_steps_batched_body = jax.vmap(_scan_steps_body, in_axes=_IN_AXES)
 _level_step_batched = partial(jax.jit, donate_argnums=(0,))(
-    jax.vmap(_level_step_body, in_axes=_IN_AXES))
+    _level_step_batched_body)
 _scan_steps_batched = partial(jax.jit, donate_argnums=(0,))(
-    jax.vmap(_scan_steps_body, in_axes=_IN_AXES))
+    _scan_steps_batched_body)
 # robust twins additionally map the per-matrix perturbation threshold tau
 _IN_AXES_ROBUST = (0, None, 0, None, None, None, None, None)
+_level_step_robust_batched_body = jax.vmap(_level_step_robust_body,
+                                           in_axes=_IN_AXES_ROBUST)
+_scan_steps_robust_batched_body = jax.vmap(_scan_steps_robust_body,
+                                           in_axes=_IN_AXES_ROBUST)
 _level_step_robust_batched = partial(jax.jit, donate_argnums=(0,))(
-    jax.vmap(_level_step_robust_body, in_axes=_IN_AXES_ROBUST))
+    _level_step_robust_batched_body)
 _scan_steps_robust_batched = partial(jax.jit, donate_argnums=(0,))(
-    jax.vmap(_scan_steps_robust_body, in_axes=_IN_AXES_ROBUST))
+    _scan_steps_robust_batched_body)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -269,6 +283,9 @@ def _find_dense_tail(plan: FactorizePlan, min_size: int = 64,
     nlev = plan.num_levels
     if nlev < 4:
         return None
+    lo, hi = max(n - max_size, 1), n - min_size
+    if hi < lo:
+        return None
     levels = plan.levels.levels.astype(np.int64)
     # clean column partition: columns [0,c) must all be in levels < l* and
     # columns [c,n) all in levels >= l* — otherwise a tail column would be
@@ -276,14 +293,18 @@ def _find_dense_tail(plan: FactorizePlan, min_size: int = 64,
     pmax = np.concatenate([[-1], np.maximum.accumulate(levels)])   # pmax[c]
     smin = np.minimum.accumulate(levels[::-1])[::-1]               # smin[c]
     cols = np.repeat(np.arange(n, dtype=np.int64), np.diff(plan.indptr))
-    for c_star in range(max(n - max_size, 1), n - min_size + 1):
-        if pmax[c_star] < smin[c_star]:
-            size = n - c_star
-            sel = (cols >= c_star) & (plan.indices >= c_star)
-            dens = sel.sum() / (size * size)
-            if dens >= density:
-                return int(smin[c_star]), int(c_star)
-    return None
+    # entries inside the trailing [c, n) block are exactly those with
+    # min(row, col) >= c: one histogram + suffix-sum covers every candidate
+    m = np.minimum(cols, plan.indices.astype(np.int64))
+    suffix = np.cumsum(np.bincount(m, minlength=n + 1)[::-1])[::-1]
+    c = np.arange(lo, hi + 1, dtype=np.int64)
+    size = n - c
+    ok = (pmax[c] < smin[c]) & (suffix[c] / (size * size) >= density)
+    idx = np.flatnonzero(ok)
+    if not idx.size:
+        return None
+    c_star = int(c[idx[0]])    # smallest cut = largest qualifying tail
+    return int(smin[c_star]), int(c_star)
 
 
 def _build_dense_tail(plan: FactorizePlan, c_star: int, pad_key: int):
@@ -303,8 +324,7 @@ def _build_dense_tail(plan: FactorizePlan, c_star: int, pad_key: int):
     return jnp.asarray(pos), jnp.asarray(eye), Np
 
 
-@partial(jax.jit, donate_argnums=(0,), static_argnames=("interpret", "use_pallas"))
-def _dense_tail_step(vals, pos, eye, *, interpret=True, use_pallas=False):
+def _dense_tail_step_body(vals, pos, eye, *, interpret=True, use_pallas=False):
     dense = vals.at[pos].get(mode="fill", fill_value=0.0)
     dense = dense + eye.astype(vals.dtype)
     if use_pallas:
@@ -318,8 +338,12 @@ def _dense_tail_step(vals, pos, eye, *, interpret=True, use_pallas=False):
     return vals.at[pos].set(dense, mode="drop")
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _dense_tail_step_batched(vals, pos, eye):
+_dense_tail_step = partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("interpret", "use_pallas"))(
+    _dense_tail_step_body)
+
+
+def _dense_tail_step_batched_body(vals, pos, eye):
     """Batched trailing block: gather (B, Np, Np), vmapped blocked LU,
     scatter back.  Always uses the XLA reference LU — the Pallas dense
     kernel stays a per-matrix dispatch on the unbatched path."""
@@ -331,6 +355,10 @@ def _dense_tail_step_batched(vals, pos, eye):
     return vals.at[:, pos].set(dense, mode="drop")
 
 
+_dense_tail_step_batched = partial(jax.jit, donate_argnums=(0,))(
+    _dense_tail_step_batched_body)
+
+
 @dataclasses.dataclass
 class _Group:
     """One executor step: a scan-fused run, a single flat level, a
@@ -338,11 +366,128 @@ class _Group:
 
     kind: str      # "scan" | "flat" | "pallas" | "dense"
     arrays: tuple
-    mode: str
+    mode: str      # source level mode(s); "mixed" when a bucketed run fused
+                   # levels of different modes (they execute identically on
+                   # the non-Pallas path)
     # diag value indices of the columns this step factorizes ((K, Pc) for
     # scan groups, (Pc,) otherwise; padded with nnz) — the static-pivot
     # perturbation targets
     diag: object = None
+    n_levels: int = 1
+
+
+# --------------------------------------------------------------------------
+# Whole-schedule fused program
+# --------------------------------------------------------------------------
+#
+# The per-group dispatch loop (the ``jit_schedule=False`` path below) issues
+# one jitted call per group — hundreds of host->device round-trips on long,
+# narrow circuit schedules, exactly the launch overhead GLU3.0 amortizes
+# with CUDA streams / pipelining.  ``_build_factorize_runner`` compiles the
+# ENTIRE schedule (A-value scatter, every scan/flat/pallas/dense group, the
+# static-pivot guard) into one jitted program, so a (re)factorization is a
+# single device dispatch.  Runners are cached process-wide by plan digest +
+# executor config (see core/executor.py).
+
+def _apply_schedule_groups(vals, groups, diags, tau, *, kinds, robust,
+                           batched, interpret, use_pallas):
+    """Trace every group of the schedule in order; returns (vals, counts)
+    where ``counts`` collects the per-group static-pivot bump counts
+    (empty unless ``robust``)."""
+    from ..kernels import ops as kops
+
+    counts = []
+    for kind, arrs, diag in zip(kinds, groups, diags):
+        if kind == "scan":
+            if robust:
+                body = (_scan_steps_robust_batched_body if batched
+                        else _scan_steps_robust_body)
+                vals, c = body(vals, diag, tau, *arrs)
+                counts.append(c)
+            else:
+                body = (_scan_steps_batched_body if batched
+                        else _scan_steps_body)
+                vals = body(vals, *arrs)
+        elif kind == "pallas":
+            if robust:
+                if batched:
+                    vals, c = jax.vmap(kops._perturb_diags_body,
+                                       in_axes=(0, None, 0))(vals, diag, tau)
+                else:
+                    vals, c = kops._perturb_diags_body(vals, diag, tau)
+                counts.append(c)
+            body = (kops.level_update_batched_body if batched
+                    else kops.level_update_body)
+            vals = body(vals, *arrs, interpret=interpret)
+        elif kind == "dense":
+            if robust:
+                if batched:
+                    vals, c = jax.vmap(kops._perturb_diags_body,
+                                       in_axes=(0, None, 0))(vals, diag, tau)
+                else:
+                    vals, c = kops._perturb_diags_body(vals, diag, tau)
+                counts.append(c)
+            if batched:
+                vals = _dense_tail_step_batched_body(vals, *arrs)
+            else:
+                vals = _dense_tail_step_body(vals, *arrs, interpret=interpret,
+                                             use_pallas=use_pallas)
+        else:  # flat
+            flat = tuple(a[0] for a in arrs)
+            if robust:
+                body = (_level_step_robust_batched_body if batched
+                        else _level_step_robust_body)
+                vals, c = body(vals, diag, tau, *flat)
+                counts.append(c)
+            else:
+                body = (_level_step_batched_body if batched
+                        else _level_step_body)
+                vals = body(vals, *flat)
+    return vals, counts
+
+
+def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
+                            use_pallas, nnz, dtype):
+    """One jitted program for the whole schedule.
+
+    ``entry="scatter"`` takes A values (nnz_A,) / (B, nnz_A) plus the
+    scatter map and builds the filled value array inside the program (no
+    separate un-donated scatter dispatch); ``entry="filled"`` takes an
+    already-filled (and donated) value array.  Returns ``vals`` — plus
+    ``(a_max, n_perturbed)`` when the static-pivot guard is on.
+    """
+
+    def run(a, a_scatter, groups, diags, eps):
+        if entry == "scatter":
+            if batched:
+                vals = jnp.zeros((a.shape[0], nnz), dtype=dtype)
+                vals = vals.at[:, a_scatter].set(a)
+            else:
+                vals = jnp.zeros(nnz, dtype=dtype)
+                vals = vals.at[a_scatter].set(a)
+        else:
+            vals = a
+        if robust:
+            a_max = (jnp.max(jnp.abs(vals), axis=1) if batched
+                     else jnp.max(jnp.abs(vals)))
+            tau = eps * a_max
+        else:
+            a_max = tau = None
+        vals, counts = _apply_schedule_groups(
+            vals, groups, diags, tau, kinds=kinds, robust=robust,
+            batched=batched, interpret=interpret, use_pallas=use_pallas)
+        if robust:
+            if counts:
+                n_pert = sum(counts)
+            elif batched:
+                n_pert = jnp.zeros(vals.shape[0], dtype=jnp.int32)
+            else:
+                n_pert = jnp.asarray(0, dtype=jnp.int32)
+            return vals, a_max, n_pert
+        return vals
+
+    donate = (0,) if entry == "filled" else ()
+    return jax.jit(run, donate_argnums=donate)
 
 
 class JaxFactorizer:
@@ -355,8 +500,30 @@ class JaxFactorizer:
         scatter-add is deterministic so there is no atomics restriction)
     fuse_levels: scan-fuse runs of levels with equal padded shapes (the TPU
         analogue of reducing per-level kernel-launch overhead / CUDA streams)
+    fuse_buckets: quantize level shapes to a small geometric ladder chosen
+        from the plan's level-shape histogram before fusing, so long runs of
+        NEAR-equal narrow levels still collapse into one ``lax.scan`` group
+        (pad-index-``== nnz`` drop semantics make the over-padding bit-safe).
+        Implies nothing when ``fuse_levels=False``.
+    bucket_waste: per-axis over-padding bound for the bucket ladder — a
+        level is never padded past ``bucket_waste ×`` its own pow2 pad
+    jit_schedule: compile the whole schedule (scatter + every group) into
+        ONE jitted program per plan digest so a factorization is a single
+        device dispatch; ``False`` restores the per-group dispatch loop
+    executable_cache: where whole-schedule programs are cached —
+        ``"default"`` (process-wide cache, shared across GLU rebuilds on the
+        same plan), an :class:`~repro.core.executor.ExecutableCache`, or
+        ``None`` (private per-instance cache)
     use_pallas: route SEGMENTED/PANEL levels through the Pallas kernel
         (interpret mode on CPU; compiled on real TPUs)
+    dense_tail: switch-to-dense (on by default): when a trailing column
+        block is dense enough, the hundreds of tiny levels covering it are
+        replaced by ONE blocked dense-LU group inside the same fused
+        program — on fill-heavy ordered circuit matrices this converts the
+        dominant share of scatter-add update triples into matmuls (a >3x
+        end-to-end factorization win on the benchmark suite).  A no-op on
+        patterns with no qualifying tail; disable for strictly
+        sparse-schedule execution.
     """
 
     def __init__(
@@ -364,11 +531,15 @@ class JaxFactorizer:
         plan: FactorizePlan,
         dtype=jnp.float32,
         fuse_levels: bool = True,
+        fuse_buckets: bool = True,
+        bucket_waste: float = 4.0,
+        jit_schedule: bool = True,
+        executable_cache="default",
         use_pallas: bool = False,
         mode_override: Optional[str] = None,
         disable_modes: tuple = (),
         interpret: bool = True,
-        dense_tail: bool = False,
+        dense_tail: bool = True,
         dense_tail_density: float = 0.25,
         static_pivot: Optional[float] = None,
     ):
@@ -409,20 +580,32 @@ class JaxFactorizer:
                 self._dense_tail = (pos, eye)
 
         # Only the static-pivot guard needs per-group diag arrays; gating on
-        # it also keeps the default path's fusion key exactly (pn, pu, mode),
+        # it keeps the plain path's fusion key to the level's padded shapes,
         # so enabling the guard is the only thing that can change grouping.
         robust = static_pivot is not None
+        # Bucketed ragged fusion: quantize each axis's pow2 pad up to a
+        # geometric ladder picked from the plan's level-shape histogram, so
+        # levels only a factor <= bucket_waste apart share one scan shape.
+        # Off the Pallas path all modes execute the same flat XLA step, so
+        # bucketed runs also fuse ACROSS modes (group mode becomes "mixed").
+        fuse_buckets = fuse_buckets and fuse_levels
+        self.fuse_buckets = fuse_buckets
+        buckets = plan.level_shape_buckets(bucket_waste) if fuse_buckets else None
+
+        def _bucket(p: int, axis: str) -> int:
+            return bucketize(p, buckets[axis]) if buckets is not None else p
+
         groups: list[_Group] = []
         run: list[tuple] = []
         run_diag: list[np.ndarray] = []
+        run_modes: list[str] = []
         run_shape = None
-        run_mode = MODE_FLAT
 
         def _seg_diag(seg, pc: int) -> np.ndarray:
             return _pad_to(plan.diag_idx[seg.cols], pc, pad_key)
 
         def flush():
-            nonlocal run, run_diag, run_shape
+            nonlocal run, run_diag, run_modes, run_shape
             if not run:
                 return
             stacked = tuple(
@@ -433,11 +616,13 @@ class JaxFactorizer:
                 diag = jnp.asarray(np.stack(run_diag))
                 if len(run) == 1:
                     diag = diag[0]
+            mode = run_modes[0] if len(set(run_modes)) == 1 else "mixed"
             groups.append(
                 _Group(kind="scan" if len(run) > 1 else "flat",
-                       arrays=stacked, mode=run_mode, diag=diag)
+                       arrays=stacked, mode=mode, diag=diag,
+                       n_levels=len(run))
             )
-            run, run_diag, run_shape = [], [], None
+            run, run_diag, run_modes, run_shape = [], [], [], None
 
         for seg in plan.segments:
             if seg.level >= level_cut:
@@ -456,9 +641,9 @@ class JaxFactorizer:
                 )
                 continue
             ns, us = seg.norm_slice, seg.upd_slice
-            pn = _pow2(seg.n_norm)
-            pu = _pow2(seg.n_upd)
-            pc = _pow2(len(seg.cols))
+            pn = _bucket(_pow2(seg.n_norm), "norm")
+            pu = _bucket(_pow2(seg.n_upd), "upd")
+            pc = _bucket(_pow2(len(seg.cols)), "cols")
             arrs = (
                 _pad_to(plan.norm_idx[ns], pn, pad_key),
                 _pad_to(plan.norm_diag[ns], pn, pad_key),
@@ -466,17 +651,22 @@ class JaxFactorizer:
                 _pad_to(plan.uidx[us], pu, pad_key),
                 _pad_to(plan.didx[us], pu, pad_key),
             )
-            shape = (pn, pu, pc, mode) if robust else (pn, pu, mode)
+            if fuse_buckets:
+                # execution is mode-agnostic here, so the key is shape-only
+                shape = (pn, pu, pc) if robust else (pn, pu)
+            else:
+                shape = (pn, pu, pc, mode) if robust else (pn, pu, mode)
             if fuse_levels and shape == run_shape:
                 run.append(arrs)
                 if robust:
                     run_diag.append(_seg_diag(seg, pc))
+                run_modes.append(mode)
             else:
                 flush()
                 run = [arrs]
                 run_diag = [_seg_diag(seg, pc)] if robust else []
+                run_modes = [mode]
                 run_shape = shape
-                run_mode = mode
             if not fuse_levels:
                 flush()
         flush()
@@ -490,20 +680,77 @@ class JaxFactorizer:
                                  mode="dense", diag=tail_diag))
         self._groups = groups
 
+        # Static schedule signature + pytree views for the fused runner.
+        self.jit_schedule = jit_schedule
+        self._exec_cache = resolve_executable_cache(executable_cache)
+        self._kinds = tuple(g.kind for g in groups)
+        self._group_arrays = tuple(g.arrays for g in groups)
+        self._group_diags = tuple(g.diag for g in groups)
+        self.n_groups = len(groups)
+        # dispatch count of the most recent factorize* call (1 on the fused
+        # path; one per jitted group call — plus entry scatter — otherwise)
+        self.last_n_dispatches = 0
+
+    # -- whole-schedule fused path -----------------------------------------
+
+    def _runner_key(self, entry: str, batched: bool):
+        robust = self.static_pivot is not None
+        return ("factorize", self.plan.digest, entry, batched, self._kinds,
+                np.dtype(self.dtype).str, robust, self.use_pallas,
+                self.interpret, self.nnz)
+
+    def _runner_for(self, entry: str, batched: bool):
+        robust = self.static_pivot is not None
+        return self._exec_cache.get_or_build(
+            self._runner_key(entry, batched),
+            lambda: _build_factorize_runner(
+                self._kinds, entry=entry, batched=batched, robust=robust,
+                interpret=self.interpret, use_pallas=self.use_pallas,
+                nnz=self.nnz, dtype=self.dtype))
+
+    def _factorize_fused(self, a, *, entry: str, batched: bool) -> jnp.ndarray:
+        robust = self.static_pivot is not None
+        runner = self._runner_for(entry, batched)
+        eps = (jnp.asarray(self.static_pivot, dtype=self.dtype)
+               if robust else None)
+        out = runner(a, self._a_scatter, self._group_arrays,
+                     self._group_diags, eps)
+        self.last_n_dispatches = 1
+        if robust:
+            vals, self.last_a_max, self.last_n_perturbed = out
+        else:
+            vals = out
+            self.last_a_max = None
+            self.last_n_perturbed = None
+        return vals
+
     def factorize(self, a_vals) -> jnp.ndarray:
         """Scatter A values into the filled pattern and factorize in place."""
+        a = jnp.asarray(a_vals, dtype=self.dtype)
+        if self.jit_schedule:
+            # scatter folded into the fused program: no separate un-donated
+            # nnz-sized zeros+set dispatch per refactorization
+            return self._factorize_fused(a, entry="scatter", batched=False)
         vals = jnp.zeros(self.nnz, dtype=self.dtype)
-        vals = vals.at[self._a_scatter].set(jnp.asarray(a_vals, dtype=self.dtype))
-        return self.factorize_filled(vals)
+        vals = vals.at[self._a_scatter].set(a)
+        out = self.factorize_filled(vals)
+        self.last_n_dispatches += 1     # the entry scatter
+        return out
 
     def factorize_filled(self, vals: jnp.ndarray) -> jnp.ndarray:
         from ..kernels import ops as kops
 
+        if self.jit_schedule:
+            return self._factorize_fused(
+                jnp.asarray(vals, dtype=self.dtype), entry="filled",
+                batched=False)
         robust = self.static_pivot is not None
+        n_dispatch = 0
         if robust:
             self.last_a_max = a_max = jnp.max(jnp.abs(vals))
             tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * a_max
             counts = []
+            n_dispatch += 1
         else:
             # no extra dispatch on the plain hot path; diagnostics that
             # need max|A| recompute it lazily from the caller's retained
@@ -517,17 +764,22 @@ class JaxFactorizer:
                     counts.append(c)
                 else:
                     vals = _scan_steps(vals, *g.arrays)
+                n_dispatch += 1
             elif g.kind == "pallas":
                 if robust:
                     vals, c = kops.perturb_diags(vals, g.diag, tau)
                     counts.append(c)
+                    n_dispatch += 1
                 vals = kops.level_update(vals, *g.arrays, interpret=self.interpret)
+                n_dispatch += 1
             elif g.kind == "dense":
                 if robust:
                     vals, c = kops.perturb_diags(vals, g.diag, tau)
                     counts.append(c)
+                    n_dispatch += 1
                 vals = _dense_tail_step(vals, *g.arrays, interpret=self.interpret,
                                         use_pallas=self.use_pallas)
+                n_dispatch += 1
             else:
                 if robust:
                     vals, c = _level_step_robust(vals, g.diag, tau,
@@ -535,9 +787,11 @@ class JaxFactorizer:
                     counts.append(c)
                 else:
                     vals = _level_step(vals, *(a[0] for a in g.arrays))
+                n_dispatch += 1
         if robust:
             self.last_n_perturbed = sum(counts) if counts \
                 else jnp.asarray(0, dtype=jnp.int32)
+        self.last_n_dispatches = n_dispatch
         return vals
 
     # -- batched refactorization (one plan, many matrices) -------------------
@@ -552,18 +806,28 @@ class JaxFactorizer:
         a = jnp.asarray(a_vals_batch, dtype=self.dtype)
         if a.ndim != 2:
             raise ValueError(f"expected (B, nnz_A) values, got shape {a.shape}")
+        if self.jit_schedule:
+            return self._factorize_fused(a, entry="scatter", batched=True)
         vals = jnp.zeros((a.shape[0], self.nnz), dtype=self.dtype)
         vals = vals.at[:, self._a_scatter].set(a)
-        return self.factorize_filled_batched(vals)
+        out = self.factorize_filled_batched(vals)
+        self.last_n_dispatches += 1     # the entry scatter
+        return out
 
     def factorize_filled_batched(self, vals: jnp.ndarray) -> jnp.ndarray:
         from ..kernels import ops as kops
 
+        if self.jit_schedule:
+            return self._factorize_fused(
+                jnp.asarray(vals, dtype=self.dtype), entry="filled",
+                batched=True)
         robust = self.static_pivot is not None
+        n_dispatch = 0
         if robust:
             self.last_a_max = jnp.max(jnp.abs(vals), axis=1)  # (B,)
             tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * self.last_a_max
             counts = []
+            n_dispatch += 1
         else:
             self.last_a_max = None
             self.last_n_perturbed = None
@@ -575,17 +839,22 @@ class JaxFactorizer:
                     counts.append(c)
                 else:
                     vals = _scan_steps_batched(vals, *g.arrays)
+                n_dispatch += 1
             elif g.kind == "pallas":
                 if robust:
                     vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
                     counts.append(c)
+                    n_dispatch += 1
                 vals = kops.level_update_batched(vals, *g.arrays,
                                                  interpret=self.interpret)
+                n_dispatch += 1
             elif g.kind == "dense":
                 if robust:
                     vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
                     counts.append(c)
+                    n_dispatch += 1
                 vals = _dense_tail_step_batched(vals, *g.arrays)
+                n_dispatch += 1
             else:
                 if robust:
                     vals, c = _level_step_robust_batched(
@@ -593,9 +862,11 @@ class JaxFactorizer:
                     counts.append(c)
                 else:
                     vals = _level_step_batched(vals, *(a[0] for a in g.arrays))
+                n_dispatch += 1
         if robust:
             self.last_n_perturbed = sum(counts) if counts \
                 else jnp.zeros(vals.shape[0], dtype=jnp.int32)
+        self.last_n_dispatches = n_dispatch
         return vals
 
     __call__ = factorize

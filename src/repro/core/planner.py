@@ -61,7 +61,8 @@ __all__ = [
 
 # bumped whenever SymbolicPlan's layout changes, so stale on-disk plans from
 # an older build never deserialize into a newer consumer
-PLAN_FORMAT_VERSION = 2    # v2: FactorizePlan grew the reach adjacency arrays
+PLAN_FORMAT_VERSION = 3    # v3: FactorizePlan grew the content digest field
+                           # (executable-cache key); v2 added reach adjacency
 
 
 # --------------------------------------------------------------------------

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.ops import masked_correction, spmv
-from .plan import FactorizePlan
+from .executor import resolve_executable_cache
+from .plan import FactorizePlan, bucketize, choose_buckets, pow2_pad
 
 __all__ = ["JaxTriangularSolver", "trisolve_numpy"]
 
@@ -69,8 +70,7 @@ def _pad_i32(x: np.ndarray, size: int, fill: int) -> np.ndarray:
     return out
 
 
-def _pow2(x: int, lo: int = 8) -> int:
-    return max(lo, 1 << (int(x - 1).bit_length())) if x > 0 else lo
+_pow2 = pow2_pad
 
 
 def _fwd_group_body(vals, b, rows, cols, vidx):
@@ -147,6 +147,33 @@ _bwd_group_multi = partial(jax.jit, donate_argnums=(1,))(
     jax.vmap(_bwd_group_body, in_axes=(None, 0, None, None, None, None, None)))
 
 
+# -- whole-schedule fused trisolve -----------------------------------------
+#
+# One jitted program runs the forward sweep, the backward sweep, and the
+# dtype cast of the rhs — a triangular solve is a single device dispatch
+# instead of one per level group.  Neither ``vals`` (caller retains the
+# factors) nor ``b`` (caller's rhs) is donated, which also removes the
+# defensive rhs copy the per-group path needs.
+
+def _solve_schedule_body(vals, b, fwd, bwd):
+    x = jnp.asarray(b, dtype=vals.dtype)
+    for g in fwd:
+        x = _fwd_group_body(vals, x, *g)
+    for g in bwd:
+        x = _bwd_group_body(vals, x, *g)
+    return x
+
+
+def _build_trisolve_runner(kind: str):
+    if kind == "single":
+        fn = _solve_schedule_body
+    elif kind == "batched":
+        fn = jax.vmap(_solve_schedule_body, in_axes=(0, 0, None, None))
+    else:  # "multi"
+        fn = jax.vmap(_solve_schedule_body, in_axes=(None, 0, None, None))
+    return jax.jit(fn)
+
+
 class JaxTriangularSolver:
     """solve(vals, b): forward+backward substitution on the factored values."""
 
@@ -154,9 +181,18 @@ class JaxTriangularSolver:
     # excitation/seed patterns without growing unboundedly under adversarial use
     SPARSE_SCHEDULE_CAP = 32
 
-    def __init__(self, plan: FactorizePlan, fuse: bool = True):
+    def __init__(self, plan: FactorizePlan, fuse: bool = True,
+                 fuse_buckets: bool = True, bucket_waste: float = 4.0,
+                 jit_schedule: bool = True, executable_cache="default"):
         self.plan = plan
         self._fuse = fuse
+        self._fuse_buckets = fuse_buckets and fuse
+        self._bucket_waste = bucket_waste
+        self.jit_schedule = jit_schedule
+        self._exec_cache = resolve_executable_cache(executable_cache)
+        # dispatch count of the most recent solve* call (1 on the fused
+        # path; one per level group plus the rhs copy otherwise)
+        self.last_n_dispatches = 0
         self._full_schedule = self._build_schedule(None, None)
         self._sparse_schedules: OrderedDict = OrderedDict()
 
@@ -164,11 +200,24 @@ class JaxTriangularSolver:
         """Level-group schedule as (fwd_groups, bwd_groups).  ``fwd_mask`` /
         ``bwd_mask`` (boolean (n,) column masks) restrict the schedule to
         the masked columns; levels left empty are dropped entirely (fewer
-        dispatches is where the sparse-RHS win comes from)."""
+        scheduled steps is where the sparse-RHS win comes from).
+
+        With ``fuse_buckets`` the per-level pow2 pads are quantized up to a
+        geometric ladder built from THIS schedule's level-size histogram, so
+        runs of near-equal levels share one scan shape (the pad indices are
+        inert, making over-padding bit-safe)."""
         plan, fuse = self.plan, self._fuse
         n = plan.n
         pad_row = n  # out-of-range -> drop
         pad_v = plan.nnz
+
+        def make_pad(sizes_list):
+            """size -> padded size, via the bucket ladder of this schedule."""
+            if not self._fuse_buckets:
+                return _pow2
+            ladder = choose_buckets(np.asarray(sizes_list, dtype=np.int64),
+                                    max_waste=self._bucket_waste)
+            return lambda x: bucketize(_pow2(x), ladder)
 
         def build_groups(items):
             groups, run, run_shape = [], [], None
@@ -191,7 +240,7 @@ class JaxTriangularSolver:
             flush()
             return groups
 
-        fwd_items = []
+        fwd_raw = []
         nlev = len(plan.fwd_ptr) - 1
         for l in range(nlev):
             s, e = int(plan.fwd_ptr[l]), int(plan.fwd_ptr[l + 1])
@@ -203,7 +252,11 @@ class JaxTriangularSolver:
                 if not keep.any():
                     continue
                 rows, cols, vidx = rows[keep], cols[keep], vidx[keep]
-            p = _pow2(len(rows))
+            fwd_raw.append((rows, cols, vidx))
+        fpad = make_pad([len(r[0]) for r in fwd_raw] or [1])
+        fwd_items = []
+        for rows, cols, vidx in fwd_raw:
+            p = fpad(len(rows))
             fwd_items.append((
                 (
                     _pad_i32(rows, p, pad_row),
@@ -214,7 +267,7 @@ class JaxTriangularSolver:
             ))
         fwd_groups = build_groups(fwd_items)
 
-        bwd_items = []
+        bwd_raw = []
         nulev = len(plan.bwd_ptr) - 1
         diag = plan.diag_idx
         for l in range(nulev):
@@ -231,8 +284,13 @@ class JaxTriangularSolver:
                     continue
                 lcols = lcols[keepc]
                 rows, cols, vidx = rows[keepu], cols[keepu], vidx[keepu]
-            pu = _pow2(len(rows))
-            pc = _pow2(len(lcols))
+            bwd_raw.append((lcols, rows, cols, vidx))
+        cpad = make_pad([len(r[0]) for r in bwd_raw] or [1])
+        upad = make_pad([len(r[1]) for r in bwd_raw] or [1])
+        bwd_items = []
+        for lcols, rows, cols, vidx in bwd_raw:
+            pc = cpad(len(lcols))
+            pu = upad(len(rows))
             bwd_items.append((
                 (
                     _pad_i32(lcols, pc, pad_row),
@@ -264,29 +322,54 @@ class JaxTriangularSolver:
         n = self.plan.n
         freach = self.plan.fwd_reach(pat)
         breach = self.plan.bwd_reach(freach)
-        fmask = np.zeros(n, dtype=bool)
-        fmask[freach] = True
-        bmask = np.zeros(n, dtype=bool)
-        bmask[breach] = True
-        fwd_groups, bwd_groups = self._build_schedule(fmask, bmask)
-        entry = (fwd_groups, bwd_groups, freach, breach)
+        if len(freach) == n and len(breach) == n:
+            # the reach closure is every column: a "pruned" schedule would be
+            # a redundant twin of the full one (same work, its own compiled
+            # executables).  Reuse the full schedule OBJECT so the jit /
+            # executable caches hit instead of recompiling.
+            entry = (self._full_schedule[0], self._full_schedule[1],
+                     freach, breach)
+        else:
+            fmask = np.zeros(n, dtype=bool)
+            fmask[freach] = True
+            bmask = np.zeros(n, dtype=bool)
+            bmask[breach] = True
+            fwd_groups, bwd_groups = self._build_schedule(fmask, bmask)
+            entry = (fwd_groups, bwd_groups, freach, breach)
         self._sparse_schedules[key] = entry
         while len(self._sparse_schedules) > self.SPARSE_SCHEDULE_CAP:
             self._sparse_schedules.popitem(last=False)
         return entry
 
     def _groups_for(self, rhs_pattern):
+        """(fwd_groups, bwd_groups, schedule_id) for the rhs support; the
+        id distinguishes pruned schedules in the executable-cache key."""
         if rhs_pattern is None:
-            return self._full_schedule
+            fwd, bwd = self._full_schedule
+            return fwd, bwd, "full"
         fwd, bwd, _, _ = self.schedule_for_pattern(rhs_pattern)
-        return fwd, bwd
+        if fwd is self._full_schedule[0]:       # full-reach shortcut hit
+            return fwd, bwd, "full"
+        key = self._normalize_pattern(rhs_pattern).tobytes()
+        return fwd, bwd, key.hex()
+
+    def _run_fused(self, kind: str, vals, x, fwd, bwd, sid: str):
+        runner = self._exec_cache.get_or_build(
+            ("trisolve", self.plan.digest, sid, kind),
+            lambda: _build_trisolve_runner(kind))
+        out = runner(vals, x, tuple(fwd), tuple(bwd))
+        self.last_n_dispatches = 1
+        return out
 
     # -- solves ---------------------------------------------------------------
     def solve(self, vals: jnp.ndarray, b, rhs_pattern=None) -> jnp.ndarray:
         """With ``rhs_pattern`` (indices of b's nonzero support) the level
         schedule is pruned to the reach closure of the pattern; ``b`` MUST
         be zero outside it (the facade validates this)."""
-        fwd, bwd = self._groups_for(rhs_pattern)
+        fwd, bwd, sid = self._groups_for(rhs_pattern)
+        if self.jit_schedule:
+            return self._run_fused("single", jnp.asarray(vals),
+                                   jnp.asarray(b), fwd, bwd, sid)
         # defensive copy: the jitted group steps donate the rhs buffer, and
         # ``jnp.asarray`` is a no-op on a JAX array already of vals.dtype —
         # without the copy the *caller's* array would be deleted
@@ -295,6 +378,7 @@ class JaxTriangularSolver:
             x = _fwd_group(vals, x, *g)
         for g in bwd:
             x = _bwd_group(vals, x, *g)
+        self.last_n_dispatches = len(fwd) + len(bwd) + 1
         return x
 
     def solve_batched(self, vals_batch: jnp.ndarray, b_batch,
@@ -303,17 +387,21 @@ class JaxTriangularSolver:
         and right-hand side ``b_batch[i]`` — B solves in lockstep.  A
         ``rhs_pattern`` is shared by the whole batch (union support)."""
         vals = jnp.asarray(vals_batch)
-        fwd, bwd = self._groups_for(rhs_pattern)
-        # defensive copy — same donation hazard as :meth:`solve`
-        x = jnp.array(b_batch, dtype=vals.dtype, copy=True)
-        if vals.ndim != 2 or x.ndim != 2 or vals.shape[0] != x.shape[0]:
+        fwd, bwd, sid = self._groups_for(rhs_pattern)
+        b = jnp.asarray(b_batch)
+        if vals.ndim != 2 or b.ndim != 2 or vals.shape[0] != b.shape[0]:
             raise ValueError(
                 f"expected (B, nnz) values and (B, n) rhs, got "
-                f"{vals.shape} and {x.shape}")
+                f"{vals.shape} and {b.shape}")
+        if self.jit_schedule:
+            return self._run_fused("batched", vals, b, fwd, bwd, sid)
+        # defensive copy — same donation hazard as :meth:`solve`
+        x = jnp.array(b, dtype=vals.dtype, copy=True)
         for g in fwd:
             x = _fwd_group_batched(vals, x, *g)
         for g in bwd:
             x = _bwd_group_batched(vals, x, *g)
+        self.last_n_dispatches = len(fwd) + len(bwd) + 1
         return x
 
     def solve_multi(self, vals: jnp.ndarray, b_multi,
@@ -323,16 +411,20 @@ class JaxTriangularSolver:
         for all K rhs (the adjoint/sensitivity workload).  A ``rhs_pattern``
         is the union support of all rows."""
         vals = jnp.asarray(vals)
-        fwd, bwd = self._groups_for(rhs_pattern)
-        x = jnp.array(b_multi, dtype=vals.dtype, copy=True)
-        if vals.ndim != 1 or x.ndim != 2:
+        fwd, bwd, sid = self._groups_for(rhs_pattern)
+        b = jnp.asarray(b_multi)
+        if vals.ndim != 1 or b.ndim != 2:
             raise ValueError(
                 f"expected (nnz,) values and (K, n) rhs, got "
-                f"{vals.shape} and {x.shape}")
+                f"{vals.shape} and {b.shape}")
+        if self.jit_schedule:
+            return self._run_fused("multi", vals, b, fwd, bwd, sid)
+        x = jnp.array(b, dtype=vals.dtype, copy=True)
         for g in fwd:
             x = _fwd_group_multi(vals, x, *g)
         for g in bwd:
             x = _bwd_group_multi(vals, x, *g)
+        self.last_n_dispatches = len(fwd) + len(bwd) + 1
         return x
 
     # -- iterative refinement -------------------------------------------------
@@ -356,6 +448,7 @@ class JaxTriangularSolver:
             solve = self.solve_multi
             res_fn = _residual_berr_multi
         x = solve(vals, b, rhs_pattern=rhs_pattern)
+        n_disp = self.last_n_dispatches + 1    # + the residual/berr pass
         r, berr = res_fn(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
         iters = jnp.zeros(berr.shape, dtype=jnp.int32)
         syncs = 0
@@ -365,6 +458,7 @@ class JaxTriangularSolver:
             chunk = min(max(1, int(sync_every)), max_iter - done)
             for _ in range(chunk):
                 d = solve(vals, r)
+                n_disp += self.last_n_dispatches + 2   # mask + residual
                 x = masked_correction(x, d, berr, tol)
                 iters = iters + (berr > tol)
                 r, berr = res_fn(a_rows, a_cols, a_vals, a_abs, x, b, n=n)
@@ -376,6 +470,7 @@ class JaxTriangularSolver:
         if berr_h is None:                      # max_iter == 0
             berr_h, iters_h = jax.device_get((berr, iters))
             syncs += 1
+        self.last_n_dispatches = n_disp
         if kind == "single":
             berr_out = float(berr_h)
             info = {"refine_iters": int(iters_h),

@@ -18,7 +18,9 @@ from .level_update import segmented_accumulate
 
 __all__ = [
     "level_update",
+    "level_update_body",
     "level_update_batched",
+    "level_update_batched_body",
     "dense_lu",
     "spmv",
     "perturb_diags",
@@ -29,8 +31,12 @@ __all__ = [
 ]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
-def level_update(
+# The ``*_body`` functions are the un-jitted step implementations: the
+# whole-schedule executors (core/factorize.py) inline them inside ONE fused
+# jitted program, while the jitted module-level wrappers below remain the
+# per-group dispatch path (and keep their donation semantics).
+
+def level_update_body(
     vals,
     norm_idx,
     norm_diag,
@@ -63,8 +69,12 @@ def level_update(
     return vals.at[col_positions].set(out, mode="drop")
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
-def level_update_batched(
+level_update = functools.partial(
+    jax.jit, static_argnames=("interpret",), donate_argnums=(0,))(
+    level_update_body)
+
+
+def level_update_batched_body(
     vals,
     norm_idx,
     norm_diag,
@@ -98,6 +108,11 @@ def level_update_batched(
     out = segmented_accumulate(col_vals.reshape(B * D, C), contribs, dl,
                                interpret=interpret)
     return vals.at[:, col_positions].set(out.reshape(B, D, C), mode="drop")
+
+
+level_update_batched = functools.partial(
+    jax.jit, static_argnames=("interpret",), donate_argnums=(0,))(
+    level_update_batched_body)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows",))

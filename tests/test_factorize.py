@@ -153,7 +153,14 @@ def test_dense_tail_switch():
         pytest.skip("no dense tail found for this instance")
     out = np.asarray(fx.factorize(np.asarray(A.data)))
     np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
-    assert len(fx._groups) < len(JaxFactorizer(plan, dtype=jnp.float64)._groups)
+    # the dense tail replaces a suffix of sparse level-steps: fewer scheduled
+    # levels run through the scan/flat groups (group COUNTS can tie under
+    # bucketed fusion, where many levels collapse into few groups either way)
+    def sparse_level_steps(f):
+        return sum(g.n_levels for g in f._groups if g.kind in ("scan", "flat"))
+
+    assert sparse_level_steps(fx) < sparse_level_steps(
+        JaxFactorizer(plan, dtype=jnp.float64, dense_tail=False))
     # the cut is a clean column partition
     info = fx.dense_tail_info
     levels = plan.levels.levels
