@@ -1,11 +1,20 @@
 """AC sweep throughput: batched complex factorize+solve vs a per-frequency
-single-matrix loop.
+single-matrix loop, plus the planar-vs-native complex storage comparison.
 
 The AC small-signal workload factorizes A(w) = G + jwC at every frequency
 point of a sweep on ONE symbolic plan.  The per-frequency loop pays the
 full per-level dispatch overhead F times; the batched path folds all F
 points into each level-group dispatch — the speedup is the paper's
 dispatch-amortization argument replayed on the complex field.
+
+The layout rows compare the two complex value storages end to end
+(``ac_planar_f*`` vs the native ``ac_batched_f*`` baseline), each checked
+against a per-frequency scipy componentwise-backward-error oracle.  Planar
+re/im-plane storage is what keeps the Pallas SEGMENTED/PANEL/dense-tail
+kernels available for complex dtypes (they take no complex operands); those
+kernels only COMPILE on real TPU backends — interpret mode is a correctness
+emulation, not a perf path — so on CPU the planar rows measure the planar
+arithmetic's flat-XLA lowering under the same single-dispatch schedule.
 """
 from __future__ import annotations
 
@@ -14,6 +23,25 @@ import numpy as np
 from .common import row, timeit
 
 FREQ_COUNTS = [4, 16]
+BERR_TOL = 1e-10
+
+
+def _scipy_berr(pat, n, vals, rhs, x):
+    """Worst per-frequency componentwise backward error, scipy-side:
+    max_i |b - A x|_i / (|A| |x| + |b|)_i over all frequency rows."""
+    import scipy.sparse as sp
+
+    worst = 0.0
+    for k in range(vals.shape[0]):
+        A = sp.csc_matrix((vals[k], pat.indices, pat.indptr), shape=(n, n))
+        r = np.abs(rhs[k] - A @ x[k])
+        denom = np.abs(A) @ np.abs(x[k]) + np.abs(rhs[k])
+        ok = denom > 0
+        berr = float((r[ok] / denom[ok]).max()) if ok.any() else 0.0
+        if np.any(r[~ok] > 0):
+            berr = np.inf
+        worst = max(worst, berr)
+    return worst
 
 
 def main():
@@ -59,6 +87,32 @@ def main():
                         "speedup_vs_loop": speedup})
     print(f"# batched complex sweep at F={FREQ_COUNTS[-1]}: "
           f"{results[-1]['speedup_vs_loop']:.2f}x the per-frequency loop")
+
+    # -- planar vs native complex storage, scipy-oracle checked --------------
+    print("# layout comparison: F,us_per_freq_native,us_per_freq_planar,"
+          "berr_native,berr_planar")
+    for F in FREQ_COUNTS:
+        vals, rhs = vals_all[:F], rhs_all[:F]
+        per = {}
+        for layout in ("native", "planar"):
+            g = GLU(CSC(pat.n, pat.indptr, pat.indices, vals[0]),
+                    dtype=jnp.complex128, layout=layout)
+            t, x = timeit(lambda g=g: g.refactorize_solve(vals, rhs))
+            info = g.solve_info
+            assert info["n_dispatches"] == 1, info["n_dispatches"]
+            assert info["layout"] == layout, info["layout"]
+            berr = _scipy_berr(pat, ckt.n, vals, rhs, np.asarray(x))
+            assert berr <= BERR_TOL, (layout, berr)
+            per[layout] = (t / F, berr)
+        tn, bn = per["native"]
+        tp, bp = per["planar"]
+        print(f"{F},{tn * 1e6:.1f},{tp * 1e6:.1f},{bn:.2e},{bp:.2e}",
+              flush=True)
+        row(f"ac_planar_f{F}", tp * 1e6,
+            f"vs_native={tn / tp:.2f}x berr={bp:.1e} dispatches=1")
+        results.append({"freqs": F, "layout": "planar",
+                        "per_freq_s": tp, "berr": bp,
+                        "native_per_freq_s": tn, "native_berr": bn})
     return results
 
 

@@ -3,12 +3,15 @@
 Usage:
     python -m benchmarks.diff BENCH_PR6.json BENCH_PR7.json
     python -m benchmarks.diff --latest .          # two newest BENCH_PR*.json
+    python -m benchmarks.diff --latest . --gate-prefixes factorize_,ac_,solve_
 
-Compares rows by name and fails (exit 1) when any ``factorize_*`` row of the
-newer artifact regresses by more than ``--threshold`` (default 1.3x) against
-the older one.  Other rows are reported informationally — they carry too
-much machine-to-machine noise to gate on, while the factorize rows are the
-repo's headline numbers and the ones every PR is expected to protect.
+Compares rows by name and fails (exit 1) when any gated row of the newer
+artifact regresses by more than ``--threshold`` (default 1.3x) against the
+older one.  Gated rows are those whose name starts with one of the
+``--gate-prefixes`` (default ``factorize_`` and ``ac_`` — the repo's
+headline factorization numbers plus the batched AC sweep rows every PR is
+expected to protect).  Other rows are reported informationally — they carry
+too much machine-to-machine noise to gate on.
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ import re
 import sys
 from pathlib import Path
 
-GATED_PREFIX = "factorize_"
+DEFAULT_GATE_PREFIXES = ("factorize_", "ac_")
 
 
 def load_rows(path: str) -> dict:
@@ -41,25 +44,30 @@ def find_latest_pair(directory: str):
     return found[-2][1], found[-1][1]
 
 
-def diff(old_path: str, new_path: str, threshold: float = 1.3) -> int:
+def is_gated(name: str, prefixes=DEFAULT_GATE_PREFIXES) -> bool:
+    return any(name.startswith(p) for p in prefixes)
+
+
+def diff(old_path: str, new_path: str, threshold: float = 1.3,
+         gate_prefixes=DEFAULT_GATE_PREFIXES) -> int:
     old = load_rows(old_path)
     new = load_rows(new_path)
     failures = []
+    gates = "|".join(f"{p}*" for p in gate_prefixes)
     print(f"# perf diff: {old_path} -> {new_path} "
-          f"(gate: {GATED_PREFIX}* > {threshold:.2f}x)")
+          f"(gate: {gates} > {threshold:.2f}x)")
     print("name,old_us,new_us,ratio,gated,status")
     for name in sorted(set(old) | set(new)):
         o, n = old.get(name), new.get(name)
+        gated = is_gated(name, gate_prefixes)
         if o is None or n is None:
             ou = "-" if o is None else format(o["us_per_call"], ".1f")
             nu = "-" if n is None else format(n["us_per_call"], ".1f")
-            gated = "yes" if name.startswith(GATED_PREFIX) else "no"
-            print(f"{name},{ou},{nu},-,{gated},"
+            print(f"{name},{ou},{nu},-,{'yes' if gated else 'no'},"
                   f"{'added' if o is None else 'removed'}")
             continue
         ou, nu = o["us_per_call"], n["us_per_call"]
         ratio = nu / ou if ou > 0 else float("inf")
-        gated = name.startswith(GATED_PREFIX)
         status = "ok"
         if gated and ratio > threshold:
             status = "REGRESSION"
@@ -86,7 +94,11 @@ def main(argv=None) -> int:
     parser.add_argument("--threshold", type=float, default=1.3,
                         help="max allowed new/old ratio on gated rows "
                              "(default 1.3)")
+    parser.add_argument("--gate-prefixes", default=",".join(DEFAULT_GATE_PREFIXES),
+                        help="comma-separated row-name prefixes to gate on "
+                             f"(default {','.join(DEFAULT_GATE_PREFIXES)})")
     args = parser.parse_args(argv)
+    prefixes = tuple(p for p in args.gate_prefixes.split(",") if p)
     if args.latest is not None:
         pair = find_latest_pair(args.latest)
         if pair is None:
@@ -97,7 +109,7 @@ def main(argv=None) -> int:
         old_path, new_path = args.artifacts
     else:
         parser.error("pass OLD.json NEW.json or --latest DIR")
-    return diff(old_path, new_path, args.threshold)
+    return diff(old_path, new_path, args.threshold, gate_prefixes=prefixes)
 
 
 if __name__ == "__main__":

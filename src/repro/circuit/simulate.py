@@ -479,6 +479,7 @@ def ac_sweep(
     mc64="scale",
     escalation: str = "ladder",
     ladder_config: Optional[LadderConfig] = None,
+    layout: str = "auto",
 ) -> ACSweepResult:
     """AC small-signal frequency sweep: ``A(w) x(w) = b`` at every point.
 
@@ -504,6 +505,12 @@ def ac_sweep(
     the op point carries into the AC solver's construction.  A
     non-converged op-point Newton loop sets ``op_converged=False`` and
     warns — the sweep would silently linearize at a wrong operating point.
+
+    ``layout`` selects the AC solver's complex value storage: ``"auto"``
+    (default) uses planar re/im planes whenever ``use_pallas=True``, which
+    keeps mode-adaptive Pallas execution active for the complex systems
+    (and stays native otherwise); ``"native"`` forces the flat-XLA
+    native-complex reference path.
     """
     import jax.numpy as jnp
 
@@ -583,7 +590,7 @@ def ac_sweep(
     ac_kwargs = dict(ordering=ordering, dtype=jnp.complex128,
                      use_pallas=use_pallas, refine=refine,
                      refine_tol=refine_tol, static_pivot=static_pivot,
-                     mc64=mc64)
+                     mc64=mc64, layout=layout)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals_ac[0]),
               **(ac_kwargs if ladder is None
                  else ladder.glu_kwargs(ac_kwargs)))

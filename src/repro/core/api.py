@@ -38,6 +38,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..sparse.csc import CSC
+from ..sparse.layout import resolve_layout, unpack_planes
 from .factorize import JaxFactorizer
 from .planner import (
     MC64Scaling,
@@ -96,6 +97,7 @@ class GLU:
         mode_override: Optional[str] = None,
         interpret: bool = True,
         plan_cache="default",
+        layout: str = "auto",
     ):
         """``mc64``: ``"scale"``/``True`` — full Duff-Koster max-product
         matching with Dr/Dc scalings; ``"structural"`` — zero-free diagonal
@@ -129,6 +131,15 @@ class GLU:
         the fused program instead of hundreds of tiny scatter levels (no-op
         when no qualifying tail exists; ``dense_tail=False`` forces the
         strictly sparse schedule).
+
+        ``layout``: device value-storage layout — ``"auto"`` (default)
+        stores complex factors as split re/im planes (planar) whenever
+        ``use_pallas=True``, which keeps the Pallas SEGMENTED/PANEL/
+        dense-tail kernels in play for complex dtypes (they take no complex
+        operands); without ``use_pallas`` auto stays ``"native"``, the
+        faster flat-XLA lowering.  ``"native"``/``"planar"`` force either
+        path.  The public interface (``solve``, ``factorized_values``,
+        refinement) always speaks native complex regardless.
         """
         plan, scaling, from_cache = plan_factorization(
             A, ordering=ordering, symbolic=symbolic, mc64=mc64,
@@ -140,7 +151,7 @@ class GLU:
             executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
-            mode_override=mode_override, interpret=interpret)
+            mode_override=mode_override, interpret=interpret, layout=layout)
 
     @classmethod
     def from_plan(
@@ -162,6 +173,7 @@ class GLU:
         dense_tail_density: float = 0.25,
         mode_override: Optional[str] = None,
         interpret: bool = True,
+        layout: str = "auto",
     ) -> "GLU":
         """Build a GLU around a prebuilt :class:`SymbolicPlan`, skipping all
         symbolic work.
@@ -187,7 +199,7 @@ class GLU:
             executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
-            mode_override=mode_override, interpret=interpret)
+            mode_override=mode_override, interpret=interpret, layout=layout)
         return self
 
     def _setup(
@@ -210,10 +222,19 @@ class GLU:
         dense_tail_density: float,
         mode_override: Optional[str],
         interpret: bool,
+        layout: str,
     ) -> None:
         # resolve the effective dtype ONCE; a float64/complex128 request
         # without x64 enabled raises here instead of silently degrading
         dtype = resolve_value_dtype(dtype)
+        # "auto" picks planar exactly when it buys something: complex dtype
+        # AND mode-adaptive Pallas execution requested.  Without use_pallas
+        # every level runs flat XLA, where native complex (an interleaved
+        # re/im layout already) is the faster lowering — planar would only
+        # add plane bookkeeping.  Pass layout="planar" to force planes.
+        if layout == "auto" and not use_pallas:
+            layout = "native"
+        self.layout = resolve_layout(layout, dtype)
         self.n = A.n
         self.symbolic_plan = plan
         self.plan_from_cache = bool(from_cache)
@@ -248,11 +269,12 @@ class GLU:
             use_pallas=use_pallas, mode_override=mode_override,
             interpret=interpret, dense_tail=dense_tail,
             dense_tail_density=dense_tail_density, static_pivot=static_pivot,
+            layout=self.layout.name,
         )
         self._solver = JaxTriangularSolver(
             self.plan, fuse=fuse_levels, fuse_buckets=fuse_buckets,
             bucket_waste=bucket_waste, jit_schedule=jit_schedule,
-            executable_cache=executable_cache)
+            executable_cache=executable_cache, layout=self.layout.name)
         self._vals: Optional[jnp.ndarray] = None
         self._vals_batch: Optional[jnp.ndarray] = None
         self._a_vals: Optional[jnp.ndarray] = None
@@ -288,8 +310,13 @@ class GLU:
         return self
 
     def factorized_values(self) -> jnp.ndarray:
+        """Factored (nnz,) values in the plan's filled pattern — always in
+        the NATIVE value dtype (planar plane storage is unpacked here; use
+        ``_vals`` for the raw device layout)."""
         if self._vals is None:
             raise RuntimeError("call factorize() first")
+        if self.layout.planar:
+            return unpack_planes(self._vals)
         return self._vals
 
     def _map_rhs_pattern(self, rhs_pattern, b) -> Optional[np.ndarray]:
@@ -409,6 +436,8 @@ class GLU:
     def factorized_values_batched(self) -> jnp.ndarray:
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
+        if self.layout.planar:
+            return unpack_planes(self._vals_batch)
         return self._vals_batch
 
     def solve_batched(self, b_batch, refine: Optional[int] = None,
@@ -499,6 +528,11 @@ class GLU:
             "n_groups": self._factorizer.n_groups,
             "n_dispatches": self._factorizer.last_n_dispatches,
             "solve_dispatches": None,
+            # mode-adaptive execution surface: which storage layout the
+            # factors use, and — when any Pallas-eligible work was routed
+            # off the Pallas path — why (None means fully active)
+            "layout": self.layout.name,
+            "pallas_disabled_reason": self._factorizer.pallas_disabled_reason,
         }
 
     def _set_solve_info(self, rinfo: dict) -> None:
@@ -506,7 +540,10 @@ class GLU:
             self._info = {"batched": False, "pivot_growth": None,
                           "min_diag": None, "n_perturbed": None,
                           "n_groups": self._factorizer.n_groups,
-                          "n_dispatches": None}
+                          "n_dispatches": None,
+                          "layout": self.layout.name,
+                          "pallas_disabled_reason":
+                              self._factorizer.pallas_disabled_reason}
         self._info.update(rinfo)
         self._info["solve_dispatches"] = self._solver.last_n_dispatches
 
@@ -541,14 +578,19 @@ class GLU:
             if a_max is None:
                 a_abs = jnp.abs(a_vals)
                 a_max = jnp.max(a_abs, axis=1) if batched else jnp.max(a_abs)
-            fn = kops.factor_stats_batched if batched else kops.factor_stats
+            if self.layout.planar:
+                fn = (kops.factor_stats_planar_batched if batched
+                      else kops.factor_stats_planar)
+            else:
+                fn = (kops.factor_stats_batched if batched
+                      else kops.factor_stats)
             growth, min_diag = fn(vals, self._factorizer._diag_idx, a_max)
             self._info.update(pivot_growth=growth, min_diag=min_diag,
                               n_perturbed=n_pert)
             self._pending_stats = None
         out = {}
         for key, v in self._info.items():
-            if v is None or isinstance(v, (bool, int, float)):
+            if v is None or isinstance(v, (bool, int, float, str)):
                 out[key] = v
             else:
                 a = np.asarray(v)

@@ -9,7 +9,11 @@ Newton re-scaling rebuild, a sweep corner, a second serving tenant) run
 byte-identical schedules.  This cache keys the jitted callables by
 
   (executor kind, plan digest, entry point, batched, group-kind tuple,
-   dtype, robust, use_pallas, interpret, ...)
+   dtype, robust, use_pallas, interpret, value layout, ...)
+
+The value-layout field keeps native-complex and planar re/im-plane
+programs apart — same plan, same dtype string, different array shapes and
+arithmetic.
 
 so the second construction compiles nothing: it reuses the same callable
 object, whose ``jax.jit`` cache already holds the compiled executable for

@@ -22,6 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..sparse.layout import pabs, pack_planes, pdiv, pmul, resolve_layout
 from .executor import resolve_executable_cache
 from .plan import (
     MODE_FLAT,
@@ -225,6 +226,80 @@ _scan_steps_robust_batched = partial(jax.jit, donate_argnums=(0,))(
     _scan_steps_robust_batched_body)
 
 
+# Planar complex twins (layout="planar"): ``vals`` carries split re/im
+# planes, (nnz, 2) single / (B, nnz, 2) batched.  All index machinery is
+# identical — gathers/scatters on a (nnz, 2) array index ROWS, so the same
+# plan arrays and pad-index-== nnz drop/fill semantics apply — only the
+# value arithmetic changes: complex MAC = 4 real MACs + sign (``pmul``),
+# normalisation divides by conj(d)/|d|^2 (``pdiv``).
+
+def _level_step_planar_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
+    lv = vals.at[norm_idx].get(mode="fill", fill_value=0.0)
+    dv = vals.at[norm_diag].get(mode="fill", fill_value=1.0)
+    vals = vals.at[norm_idx].set(pdiv(lv, dv), mode="drop")
+    l = vals.at[lidx].get(mode="fill", fill_value=0.0)
+    u = vals.at[uidx].get(mode="fill", fill_value=0.0)
+    return vals.at[didx].add(-pmul(l, u), mode="drop")
+
+
+def _scan_steps_planar_body(vals, norm_idx, norm_diag, lidx, uidx, didx):
+    def body(v, xs):
+        return _level_step_planar_body(v, *xs), None
+
+    vals, _ = jax.lax.scan(body, vals,
+                           (norm_idx, norm_diag, lidx, uidx, didx))
+    return vals
+
+
+def _level_step_robust_planar_body(vals, lev_diag, tau, norm_idx, norm_diag,
+                                   lidx, uidx, didx):
+    from ..kernels.ops import _perturb_diags_planar_body
+
+    vals, n_bumped = _perturb_diags_planar_body(vals, lev_diag, tau)
+    return (_level_step_planar_body(vals, norm_idx, norm_diag,
+                                    lidx, uidx, didx), n_bumped)
+
+
+def _scan_steps_robust_planar_body(vals, lev_diag, tau, norm_idx, norm_diag,
+                                   lidx, uidx, didx):
+    def body(v, xs):
+        v, c = _level_step_robust_planar_body(v, xs[0], tau, *xs[1:])
+        return v, c
+
+    vals, counts = jax.lax.scan(
+        body, vals, (lev_diag, norm_idx, norm_diag, lidx, uidx, didx))
+    return vals, jnp.sum(counts)
+
+
+_level_step_planar = partial(jax.jit, donate_argnums=(0,))(
+    _level_step_planar_body)
+_scan_steps_planar = partial(jax.jit, donate_argnums=(0,))(
+    _scan_steps_planar_body)
+_level_step_robust_planar = partial(jax.jit, donate_argnums=(0,))(
+    _level_step_robust_planar_body)
+_scan_steps_robust_planar = partial(jax.jit, donate_argnums=(0,))(
+    _scan_steps_robust_planar_body)
+
+# the batch axis maps over the leading axis of (B, nnz, 2) vals; the same
+# in_axes as the native twins apply
+_level_step_planar_batched_body = jax.vmap(_level_step_planar_body,
+                                           in_axes=_IN_AXES)
+_scan_steps_planar_batched_body = jax.vmap(_scan_steps_planar_body,
+                                           in_axes=_IN_AXES)
+_level_step_planar_batched = partial(jax.jit, donate_argnums=(0,))(
+    _level_step_planar_batched_body)
+_scan_steps_planar_batched = partial(jax.jit, donate_argnums=(0,))(
+    _scan_steps_planar_batched_body)
+_level_step_robust_planar_batched_body = jax.vmap(
+    _level_step_robust_planar_body, in_axes=_IN_AXES_ROBUST)
+_scan_steps_robust_planar_batched_body = jax.vmap(
+    _scan_steps_robust_planar_body, in_axes=_IN_AXES_ROBUST)
+_level_step_robust_planar_batched = partial(jax.jit, donate_argnums=(0,))(
+    _level_step_robust_planar_batched_body)
+_scan_steps_robust_planar_batched = partial(jax.jit, donate_argnums=(0,))(
+    _scan_steps_robust_planar_batched_body)
+
+
 def _round_up(x: int, m: int) -> int:
     return ((max(x, 1) + m - 1) // m) * m
 
@@ -359,6 +434,45 @@ _dense_tail_step_batched = partial(jax.jit, donate_argnums=(0,))(
     _dense_tail_step_batched_body)
 
 
+def _dense_tail_step_planar_body(vals, pos, eye, *, interpret=True,
+                                 use_pallas=False):
+    """Planar trailing block: gather (Np, Np, 2), factor the (2, Np, Np)
+    plane pair (Pallas planar kernel or its XLA twin), scatter back.  The
+    eye mask pads only the REAL plane — padded diagonal slots become 1+0j,
+    exactly as on the native path."""
+    dense = vals.at[pos].get(mode="fill", fill_value=0.0)
+    dense = jnp.moveaxis(dense, -1, 0)
+    dense = dense.at[0].add(eye.astype(dense.dtype))
+    if use_pallas:
+        from ..kernels.dense_lu import dense_lu_planar
+
+        dense = dense_lu_planar(dense, interpret=interpret)
+    else:
+        from ..kernels.ref import dense_lu_planar_ref
+
+        dense = dense_lu_planar_ref(dense)
+    return vals.at[pos].set(jnp.moveaxis(dense, 0, -1), mode="drop")
+
+
+_dense_tail_step_planar = partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("interpret", "use_pallas"))(
+    _dense_tail_step_planar_body)
+
+
+def _dense_tail_step_planar_batched_body(vals, pos, eye):
+    from ..kernels.ref import dense_lu_planar_ref
+
+    dense = vals.at[:, pos].get(mode="fill", fill_value=0.0)  # (B, Np, Np, 2)
+    dense = jnp.moveaxis(dense, -1, 1)                        # (B, 2, Np, Np)
+    dense = dense.at[:, 0].add(eye.astype(dense.dtype)[None])
+    dense = jax.vmap(dense_lu_planar_ref)(dense)
+    return vals.at[:, pos].set(jnp.moveaxis(dense, 1, -1), mode="drop")
+
+
+_dense_tail_step_planar_batched = partial(jax.jit, donate_argnums=(0,))(
+    _dense_tail_step_planar_batched_body)
+
+
 @dataclasses.dataclass
 class _Group:
     """One executor step: a scan-fused run, a single flat level, a
@@ -389,65 +503,90 @@ class _Group:
 # single device dispatch.  Runners are cached process-wide by plan digest +
 # executor config (see core/executor.py).
 
+def _schedule_step_bodies(planar: bool, batched: bool) -> dict:
+    """The un-jitted step-body set for one (layout, batched) combination —
+    the native and planar paths trace the same schedule through different
+    arithmetic."""
+    from ..kernels import ops as kops
+
+    if planar:
+        return dict(
+            scan=(_scan_steps_planar_batched_body if batched
+                  else _scan_steps_planar_body),
+            scan_robust=(_scan_steps_robust_planar_batched_body if batched
+                         else _scan_steps_robust_planar_body),
+            flat=(_level_step_planar_batched_body if batched
+                  else _level_step_planar_body),
+            flat_robust=(_level_step_robust_planar_batched_body if batched
+                         else _level_step_robust_planar_body),
+            pallas=(kops.level_update_planar_batched_body if batched
+                    else kops.level_update_planar_body),
+            perturb=kops._perturb_diags_planar_body,
+            dense=(_dense_tail_step_planar_batched_body if batched
+                   else _dense_tail_step_planar_body),
+        )
+    return dict(
+        scan=(_scan_steps_batched_body if batched else _scan_steps_body),
+        scan_robust=(_scan_steps_robust_batched_body if batched
+                     else _scan_steps_robust_body),
+        flat=(_level_step_batched_body if batched else _level_step_body),
+        flat_robust=(_level_step_robust_batched_body if batched
+                     else _level_step_robust_body),
+        pallas=(kops.level_update_batched_body if batched
+                else kops.level_update_body),
+        perturb=kops._perturb_diags_body,
+        dense=(_dense_tail_step_batched_body if batched
+               else _dense_tail_step_body),
+    )
+
+
 def _apply_schedule_groups(vals, groups, diags, tau, *, kinds, robust,
-                           batched, interpret, use_pallas):
+                           batched, interpret, use_pallas, planar=False):
     """Trace every group of the schedule in order; returns (vals, counts)
     where ``counts`` collects the per-group static-pivot bump counts
     (empty unless ``robust``)."""
-    from ..kernels import ops as kops
+    bodies = _schedule_step_bodies(planar, batched)
+
+    def perturb(vals, diag, tau):
+        if batched:
+            return jax.vmap(bodies["perturb"],
+                            in_axes=(0, None, 0))(vals, diag, tau)
+        return bodies["perturb"](vals, diag, tau)
 
     counts = []
     for kind, arrs, diag in zip(kinds, groups, diags):
         if kind == "scan":
             if robust:
-                body = (_scan_steps_robust_batched_body if batched
-                        else _scan_steps_robust_body)
-                vals, c = body(vals, diag, tau, *arrs)
+                vals, c = bodies["scan_robust"](vals, diag, tau, *arrs)
                 counts.append(c)
             else:
-                body = (_scan_steps_batched_body if batched
-                        else _scan_steps_body)
-                vals = body(vals, *arrs)
+                vals = bodies["scan"](vals, *arrs)
         elif kind == "pallas":
             if robust:
-                if batched:
-                    vals, c = jax.vmap(kops._perturb_diags_body,
-                                       in_axes=(0, None, 0))(vals, diag, tau)
-                else:
-                    vals, c = kops._perturb_diags_body(vals, diag, tau)
+                vals, c = perturb(vals, diag, tau)
                 counts.append(c)
-            body = (kops.level_update_batched_body if batched
-                    else kops.level_update_body)
-            vals = body(vals, *arrs, interpret=interpret)
+            vals = bodies["pallas"](vals, *arrs, interpret=interpret)
         elif kind == "dense":
             if robust:
-                if batched:
-                    vals, c = jax.vmap(kops._perturb_diags_body,
-                                       in_axes=(0, None, 0))(vals, diag, tau)
-                else:
-                    vals, c = kops._perturb_diags_body(vals, diag, tau)
+                vals, c = perturb(vals, diag, tau)
                 counts.append(c)
             if batched:
-                vals = _dense_tail_step_batched_body(vals, *arrs)
+                vals = bodies["dense"](vals, *arrs)
             else:
-                vals = _dense_tail_step_body(vals, *arrs, interpret=interpret,
-                                             use_pallas=use_pallas)
+                vals = bodies["dense"](vals, *arrs, interpret=interpret,
+                                       use_pallas=use_pallas)
         else:  # flat
             flat = tuple(a[0] for a in arrs)
             if robust:
-                body = (_level_step_robust_batched_body if batched
-                        else _level_step_robust_body)
-                vals, c = body(vals, diag, tau, *flat)
+                vals, c = bodies["flat_robust"](vals, diag, tau, *flat)
                 counts.append(c)
             else:
-                body = (_level_step_batched_body if batched
-                        else _level_step_body)
-                vals = body(vals, *flat)
+                vals = bodies["flat"](vals, *flat)
     return vals, counts
 
 
 def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
-                            use_pallas, nnz, dtype):
+                            use_pallas, nnz, dtype, planar=False):
     """One jitted program for the whole schedule.
 
     ``entry="scatter"`` takes A values (nnz_A,) / (B, nnz_A) plus the
@@ -455,27 +594,37 @@ def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
     separate un-donated scatter dispatch); ``entry="filled"`` takes an
     already-filled (and donated) value array.  Returns ``vals`` — plus
     ``(a_max, n_perturbed)`` when the static-pivot guard is on.
+
+    With ``planar`` the program runs on split re/im planes: a "scatter"
+    entry takes logical (native complex) A values and packs them INSIDE the
+    jitted program; a "filled" entry takes an already-planar (.., nnz, 2)
+    array.  ``dtype`` is then the real plane/storage dtype.
     """
 
     def run(a, a_scatter, groups, diags, eps):
         if entry == "scatter":
+            if planar:
+                a = pack_planes(a, dtype)
+            shape = ((a.shape[0], nnz) if batched else (nnz,))
+            if planar:
+                shape = shape + (2,)
+            vals = jnp.zeros(shape, dtype=dtype)
             if batched:
-                vals = jnp.zeros((a.shape[0], nnz), dtype=dtype)
                 vals = vals.at[:, a_scatter].set(a)
             else:
-                vals = jnp.zeros(nnz, dtype=dtype)
                 vals = vals.at[a_scatter].set(a)
         else:
             vals = a
         if robust:
-            a_max = (jnp.max(jnp.abs(vals), axis=1) if batched
-                     else jnp.max(jnp.abs(vals)))
+            mag = pabs(vals) if planar else jnp.abs(vals)
+            a_max = jnp.max(mag, axis=1) if batched else jnp.max(mag)
             tau = eps * a_max
         else:
             a_max = tau = None
         vals, counts = _apply_schedule_groups(
             vals, groups, diags, tau, kinds=kinds, robust=robust,
-            batched=batched, interpret=interpret, use_pallas=use_pallas)
+            batched=batched, interpret=interpret, use_pallas=use_pallas,
+            planar=planar)
         if robust:
             if counts:
                 n_pert = sum(counts)
@@ -524,6 +673,14 @@ class JaxFactorizer:
         end-to-end factorization win on the benchmark suite).  A no-op on
         patterns with no qualifying tail; disable for strictly
         sparse-schedule execution.
+    layout: value-storage layout — ``"native"`` (default) stores values in
+        their own dtype; ``"planar"`` stores complex values as split re/im
+        planes ``(..., 2)`` of the matching real dtype so every kernel —
+        including the Pallas SEGMENTED/PANEL and dense-tail kernels, which
+        take no complex operands — computes the complex MAC on real
+        operands; ``"auto"`` picks planar for complex dtypes.  Planar
+        factors come back as ``(nnz, 2)`` / ``(B, nnz, 2)`` real arrays
+        (``repro.sparse.unpack_planes`` recovers native complex).
     """
 
     def __init__(
@@ -542,14 +699,38 @@ class JaxFactorizer:
         dense_tail: bool = True,
         dense_tail_density: float = 0.25,
         static_pivot: Optional[float] = None,
+        layout: str = "native",
     ):
         self.plan = plan
         self.dtype = dtype
-        # Pallas TPU kernels take no complex operands: complex SEGMENTED/
-        # PANEL levels (and the dense tail) route through the equivalent
-        # flat XLA path instead
-        if use_pallas and np.issubdtype(np.dtype(dtype), np.complexfloating):
+        self.layout = resolve_layout(layout, dtype)
+        self.storage_dtype = self.layout.storage_dtype
+        # Why Pallas is (partially) off is surfaced instead of silently
+        # downgraded: ``pallas_disabled_reason`` is None iff SEGMENTED/PANEL
+        # levels and the dense tail run as compiled Pallas kernels.
+        reason = None
+        if not use_pallas:
+            reason = "use_pallas=False"
+        elif (np.issubdtype(np.dtype(dtype), np.complexfloating)
+              and not self.layout.planar):
+            # Pallas TPU kernels take no complex operands: with native
+            # complex storage the SEGMENTED/PANEL levels (and the dense
+            # tail) route through the equivalent flat XLA path.  Planar
+            # re/im storage (layout="planar" or "auto") keeps them on the
+            # Pallas path.
             use_pallas = False
+            reason = ("complex dtype with layout='native' "
+                      "(pass layout='planar' to keep Pallas kernels)")
+        elif (mode_override is not None
+              and mode_override not in (MODE_SEGMENTED, MODE_PANEL)):
+            reason = (f"mode_override={mode_override!r} routes every level "
+                      "off the Pallas path")
+        elif MODE_SEGMENTED in disable_modes and MODE_PANEL in disable_modes:
+            reason = "disable_modes removes every Pallas-eligible mode"
+        elif interpret and jax.default_backend() == "tpu":
+            reason = ("interpret=True runs interpreter-mode kernels on a "
+                      "TPU backend")
+        self.pallas_disabled_reason = reason
         self.use_pallas = use_pallas
         self.interpret = interpret
         self._a_scatter = jnp.asarray(plan.a_scatter, dtype=jnp.int32)
@@ -697,7 +878,7 @@ class JaxFactorizer:
         robust = self.static_pivot is not None
         return ("factorize", self.plan.digest, entry, batched, self._kinds,
                 np.dtype(self.dtype).str, robust, self.use_pallas,
-                self.interpret, self.nnz)
+                self.interpret, self.nnz, self.layout.name)
 
     def _runner_for(self, entry: str, batched: bool):
         robust = self.static_pivot is not None
@@ -706,12 +887,13 @@ class JaxFactorizer:
             lambda: _build_factorize_runner(
                 self._kinds, entry=entry, batched=batched, robust=robust,
                 interpret=self.interpret, use_pallas=self.use_pallas,
-                nnz=self.nnz, dtype=self.dtype))
+                nnz=self.nnz, dtype=self.storage_dtype,
+                planar=self.layout.planar))
 
     def _factorize_fused(self, a, *, entry: str, batched: bool) -> jnp.ndarray:
         robust = self.static_pivot is not None
         runner = self._runner_for(entry, batched)
-        eps = (jnp.asarray(self.static_pivot, dtype=self.dtype)
+        eps = (jnp.asarray(self.static_pivot, dtype=self.storage_dtype)
                if robust else None)
         out = runner(a, self._a_scatter, self._group_arrays,
                      self._group_diags, eps)
@@ -724,31 +906,75 @@ class JaxFactorizer:
             self.last_n_perturbed = None
         return vals
 
+    def _jitted_steps(self, batched: bool) -> dict:
+        """Jitted per-group step functions for this layout (non-fused path)."""
+        from ..kernels import ops as kops
+
+        if self.layout.planar:
+            if batched:
+                return dict(
+                    scan=_scan_steps_planar_batched,
+                    scan_robust=_scan_steps_robust_planar_batched,
+                    flat=_level_step_planar_batched,
+                    flat_robust=_level_step_robust_planar_batched,
+                    pallas=kops.level_update_planar_batched,
+                    perturb=kops.perturb_diags_planar_batched,
+                    dense=_dense_tail_step_planar_batched,
+                )
+            return dict(
+                scan=_scan_steps_planar,
+                scan_robust=_scan_steps_robust_planar,
+                flat=_level_step_planar,
+                flat_robust=_level_step_robust_planar,
+                pallas=kops.level_update_planar,
+                perturb=kops.perturb_diags_planar,
+                dense=_dense_tail_step_planar,
+            )
+        if batched:
+            return dict(
+                scan=_scan_steps_batched, scan_robust=_scan_steps_robust_batched,
+                flat=_level_step_batched, flat_robust=_level_step_robust_batched,
+                pallas=kops.level_update_batched,
+                perturb=kops.perturb_diags_batched,
+                dense=_dense_tail_step_batched,
+            )
+        return dict(
+            scan=_scan_steps, scan_robust=_scan_steps_robust,
+            flat=_level_step, flat_robust=_level_step_robust,
+            pallas=kops.level_update, perturb=kops.perturb_diags,
+            dense=_dense_tail_step,
+        )
+
     def factorize(self, a_vals) -> jnp.ndarray:
         """Scatter A values into the filled pattern and factorize in place."""
         a = jnp.asarray(a_vals, dtype=self.dtype)
         if self.jit_schedule:
             # scatter folded into the fused program: no separate un-donated
-            # nnz-sized zeros+set dispatch per refactorization
+            # nnz-sized zeros+set dispatch per refactorization (planar
+            # layouts also pack re/im planes inside the program)
             return self._factorize_fused(a, entry="scatter", batched=False)
-        vals = jnp.zeros(self.nnz, dtype=self.dtype)
+        if self.layout.planar:
+            a = pack_planes(a, self.storage_dtype)
+        vals = jnp.zeros(self.layout.storage_shape(self.nnz),
+                         dtype=self.storage_dtype)
         vals = vals.at[self._a_scatter].set(a)
         out = self.factorize_filled(vals)
         self.last_n_dispatches += 1     # the entry scatter
         return out
 
     def factorize_filled(self, vals: jnp.ndarray) -> jnp.ndarray:
-        from ..kernels import ops as kops
-
         if self.jit_schedule:
             return self._factorize_fused(
-                jnp.asarray(vals, dtype=self.dtype), entry="filled",
+                jnp.asarray(vals, dtype=self.storage_dtype), entry="filled",
                 batched=False)
+        step = self._jitted_steps(batched=False)
         robust = self.static_pivot is not None
         n_dispatch = 0
         if robust:
-            self.last_a_max = a_max = jnp.max(jnp.abs(vals))
-            tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * a_max
+            mag = pabs(vals) if self.layout.planar else jnp.abs(vals)
+            self.last_a_max = a_max = jnp.max(mag)
+            tau = jnp.asarray(self.static_pivot,
+                              dtype=self.storage_dtype) * a_max
             counts = []
             n_dispatch += 1
         else:
@@ -760,33 +986,33 @@ class JaxFactorizer:
         for g in self._groups:
             if g.kind == "scan":
                 if robust:
-                    vals, c = _scan_steps_robust(vals, g.diag, tau, *g.arrays)
+                    vals, c = step["scan_robust"](vals, g.diag, tau, *g.arrays)
                     counts.append(c)
                 else:
-                    vals = _scan_steps(vals, *g.arrays)
+                    vals = step["scan"](vals, *g.arrays)
                 n_dispatch += 1
             elif g.kind == "pallas":
                 if robust:
-                    vals, c = kops.perturb_diags(vals, g.diag, tau)
+                    vals, c = step["perturb"](vals, g.diag, tau)
                     counts.append(c)
                     n_dispatch += 1
-                vals = kops.level_update(vals, *g.arrays, interpret=self.interpret)
+                vals = step["pallas"](vals, *g.arrays, interpret=self.interpret)
                 n_dispatch += 1
             elif g.kind == "dense":
                 if robust:
-                    vals, c = kops.perturb_diags(vals, g.diag, tau)
+                    vals, c = step["perturb"](vals, g.diag, tau)
                     counts.append(c)
                     n_dispatch += 1
-                vals = _dense_tail_step(vals, *g.arrays, interpret=self.interpret,
-                                        use_pallas=self.use_pallas)
+                vals = step["dense"](vals, *g.arrays, interpret=self.interpret,
+                                     use_pallas=self.use_pallas)
                 n_dispatch += 1
             else:
                 if robust:
-                    vals, c = _level_step_robust(vals, g.diag, tau,
-                                                 *(a[0] for a in g.arrays))
+                    vals, c = step["flat_robust"](vals, g.diag, tau,
+                                                  *(a[0] for a in g.arrays))
                     counts.append(c)
                 else:
-                    vals = _level_step(vals, *(a[0] for a in g.arrays))
+                    vals = step["flat"](vals, *(a[0] for a in g.arrays))
                 n_dispatch += 1
         if robust:
             self.last_n_perturbed = sum(counts) if counts \
@@ -808,24 +1034,28 @@ class JaxFactorizer:
             raise ValueError(f"expected (B, nnz_A) values, got shape {a.shape}")
         if self.jit_schedule:
             return self._factorize_fused(a, entry="scatter", batched=True)
-        vals = jnp.zeros((a.shape[0], self.nnz), dtype=self.dtype)
+        if self.layout.planar:
+            a = pack_planes(a, self.storage_dtype)
+        vals = jnp.zeros(self.layout.storage_shape(a.shape[0], self.nnz),
+                         dtype=self.storage_dtype)
         vals = vals.at[:, self._a_scatter].set(a)
         out = self.factorize_filled_batched(vals)
         self.last_n_dispatches += 1     # the entry scatter
         return out
 
     def factorize_filled_batched(self, vals: jnp.ndarray) -> jnp.ndarray:
-        from ..kernels import ops as kops
-
         if self.jit_schedule:
             return self._factorize_fused(
-                jnp.asarray(vals, dtype=self.dtype), entry="filled",
+                jnp.asarray(vals, dtype=self.storage_dtype), entry="filled",
                 batched=True)
+        step = self._jitted_steps(batched=True)
         robust = self.static_pivot is not None
         n_dispatch = 0
         if robust:
-            self.last_a_max = jnp.max(jnp.abs(vals), axis=1)  # (B,)
-            tau = jnp.asarray(self.static_pivot, dtype=vals.dtype) * self.last_a_max
+            mag = pabs(vals) if self.layout.planar else jnp.abs(vals)
+            self.last_a_max = jnp.max(mag, axis=1)  # (B,)
+            tau = jnp.asarray(self.static_pivot,
+                              dtype=self.storage_dtype) * self.last_a_max
             counts = []
             n_dispatch += 1
         else:
@@ -834,34 +1064,32 @@ class JaxFactorizer:
         for g in self._groups:
             if g.kind == "scan":
                 if robust:
-                    vals, c = _scan_steps_robust_batched(vals, g.diag, tau,
-                                                         *g.arrays)
+                    vals, c = step["scan_robust"](vals, g.diag, tau, *g.arrays)
                     counts.append(c)
                 else:
-                    vals = _scan_steps_batched(vals, *g.arrays)
+                    vals = step["scan"](vals, *g.arrays)
                 n_dispatch += 1
             elif g.kind == "pallas":
                 if robust:
-                    vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
+                    vals, c = step["perturb"](vals, g.diag, tau)
                     counts.append(c)
                     n_dispatch += 1
-                vals = kops.level_update_batched(vals, *g.arrays,
-                                                 interpret=self.interpret)
+                vals = step["pallas"](vals, *g.arrays, interpret=self.interpret)
                 n_dispatch += 1
             elif g.kind == "dense":
                 if robust:
-                    vals, c = kops.perturb_diags_batched(vals, g.diag, tau)
+                    vals, c = step["perturb"](vals, g.diag, tau)
                     counts.append(c)
                     n_dispatch += 1
-                vals = _dense_tail_step_batched(vals, *g.arrays)
+                vals = step["dense"](vals, *g.arrays)
                 n_dispatch += 1
             else:
                 if robust:
-                    vals, c = _level_step_robust_batched(
-                        vals, g.diag, tau, *(a[0] for a in g.arrays))
+                    vals, c = step["flat_robust"](vals, g.diag, tau,
+                                                  *(a[0] for a in g.arrays))
                     counts.append(c)
                 else:
-                    vals = _level_step_batched(vals, *(a[0] for a in g.arrays))
+                    vals = step["flat"](vals, *(a[0] for a in g.arrays))
                 n_dispatch += 1
         if robust:
             self.last_n_perturbed = sum(counts) if counts \

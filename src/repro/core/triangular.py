@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.ops import masked_correction, spmv
+from ..sparse.layout import pack_planes, pdiv, pmul, unpack_planes
 from .executor import resolve_executable_cache
 from .plan import FactorizePlan, bucketize, choose_buckets, pow2_pad
 
@@ -129,8 +130,41 @@ def _residual_berr_multi(rows, cols, a_vals, a_abs, x, b, *, n):
     )(x, b)
 
 
+# Planar twins: ``vals`` is (nnz, 2) split re/im planes and the running
+# solution carries (n, 2) planes — the complex MAC / divide run on real
+# operands (pmul/pdiv).  Index gathers are layout-agnostic (they gather
+# plane ROWS), so the level-group schedule is shared with the native path.
+def _fwd_group_planar_body(vals, b, rows, cols, vidx):
+    def body(bb, xs):
+        r, c, v = xs
+        lv = vals.at[v].get(mode="fill", fill_value=0.0)     # (P, 2)
+        xc = bb.at[c].get(mode="fill", fill_value=0.0)
+        return bb.at[r].add(-pmul(lv, xc), mode="drop"), None
+
+    b, _ = jax.lax.scan(body, b, (rows, cols, vidx))
+    return b
+
+
+def _bwd_group_planar_body(vals, b, lcols, ldiag, rows, cols, vidx):
+    def body(bb, xs):
+        lc, ld, r, c, v = xs
+        # padded ldiag slots read (1, 1) planes; the pdiv result there is
+        # discarded by the dropped set, same as the native fill_value=1.0
+        dv = vals.at[ld].get(mode="fill", fill_value=1.0)
+        xj = pdiv(bb.at[lc].get(mode="fill", fill_value=0.0), dv)
+        bb = bb.at[lc].set(xj, mode="drop")
+        uv = vals.at[v].get(mode="fill", fill_value=0.0)
+        xc = bb.at[c].get(mode="fill", fill_value=0.0)
+        return bb.at[r].add(-pmul(uv, xc), mode="drop"), None
+
+    b, _ = jax.lax.scan(body, b, (lcols, ldiag, rows, cols, vidx))
+    return b
+
+
 _fwd_group = partial(jax.jit, donate_argnums=(1,))(_fwd_group_body)
 _bwd_group = partial(jax.jit, donate_argnums=(1,))(_bwd_group_body)
+_fwd_group_planar = partial(jax.jit, donate_argnums=(1,))(_fwd_group_planar_body)
+_bwd_group_planar = partial(jax.jit, donate_argnums=(1,))(_bwd_group_planar_body)
 
 # Batched twins: vals (B, nnz) and b (B, n) share the level-group index
 # arrays, so each group stays ONE dispatch for the whole batch.
@@ -145,6 +179,17 @@ _fwd_group_multi = partial(jax.jit, donate_argnums=(1,))(
     jax.vmap(_fwd_group_body, in_axes=(None, 0, None, None, None)))
 _bwd_group_multi = partial(jax.jit, donate_argnums=(1,))(
     jax.vmap(_bwd_group_body, in_axes=(None, 0, None, None, None, None, None)))
+
+_fwd_group_planar_batched = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_fwd_group_planar_body, in_axes=(0, 0, None, None, None)))
+_bwd_group_planar_batched = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_bwd_group_planar_body,
+             in_axes=(0, 0, None, None, None, None, None)))
+_fwd_group_planar_multi = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_fwd_group_planar_body, in_axes=(None, 0, None, None, None)))
+_bwd_group_planar_multi = partial(jax.jit, donate_argnums=(1,))(
+    jax.vmap(_bwd_group_planar_body,
+             in_axes=(None, 0, None, None, None, None, None)))
 
 
 # -- whole-schedule fused trisolve -----------------------------------------
@@ -164,13 +209,26 @@ def _solve_schedule_body(vals, b, fwd, bwd):
     return x
 
 
-def _build_trisolve_runner(kind: str):
+def _solve_schedule_planar_body(vals, b, fwd, bwd):
+    # planes in, native complex out: the rhs is packed INSIDE the fused
+    # program and the solution unpacked at the end, so a planar triangular
+    # solve still presents the complex interface in ONE dispatch
+    x = pack_planes(b, vals.dtype)
+    for g in fwd:
+        x = _fwd_group_planar_body(vals, x, *g)
+    for g in bwd:
+        x = _bwd_group_planar_body(vals, x, *g)
+    return unpack_planes(x)
+
+
+def _build_trisolve_runner(kind: str, planar: bool = False):
+    body = _solve_schedule_planar_body if planar else _solve_schedule_body
     if kind == "single":
-        fn = _solve_schedule_body
+        fn = body
     elif kind == "batched":
-        fn = jax.vmap(_solve_schedule_body, in_axes=(0, 0, None, None))
+        fn = jax.vmap(body, in_axes=(0, 0, None, None))
     else:  # "multi"
-        fn = jax.vmap(_solve_schedule_body, in_axes=(None, 0, None, None))
+        fn = jax.vmap(body, in_axes=(None, 0, None, None))
     return jax.jit(fn)
 
 
@@ -183,8 +241,17 @@ class JaxTriangularSolver:
 
     def __init__(self, plan: FactorizePlan, fuse: bool = True,
                  fuse_buckets: bool = True, bucket_waste: float = 4.0,
-                 jit_schedule: bool = True, executable_cache="default"):
+                 jit_schedule: bool = True, executable_cache="default",
+                 layout: str = "native"):
+        if layout not in ("native", "planar"):
+            raise ValueError(
+                f"layout must be 'native' or 'planar', got {layout!r} "
+                "(the solver has no dtype to resolve 'auto' against)")
         self.plan = plan
+        # planar: factor values arrive as (nnz, 2) / (B, nnz, 2) split re/im
+        # planes; rhs and solution stay native complex at the interface
+        self.layout = layout
+        self._planar = layout == "planar"
         self._fuse = fuse
         self._fuse_buckets = fuse_buckets and fuse
         self._bucket_waste = bucket_waste
@@ -355,11 +422,19 @@ class JaxTriangularSolver:
 
     def _run_fused(self, kind: str, vals, x, fwd, bwd, sid: str):
         runner = self._exec_cache.get_or_build(
-            ("trisolve", self.plan.digest, sid, kind),
-            lambda: _build_trisolve_runner(kind))
+            ("trisolve", self.plan.digest, sid, kind, self.layout),
+            lambda: _build_trisolve_runner(kind, planar=self._planar))
         out = runner(vals, x, tuple(fwd), tuple(bwd))
         self.last_n_dispatches = 1
         return out
+
+    def _iface_dtype(self, vals):
+        """The dtype of rhs/solution at the caller interface: the value
+        dtype natively, the matching complex dtype for planar planes."""
+        if self._planar:
+            return np.dtype(np.complex64 if vals.dtype == np.float32
+                            else np.complex128)
+        return vals.dtype
 
     # -- solves ---------------------------------------------------------------
     def solve(self, vals: jnp.ndarray, b, rhs_pattern=None) -> jnp.ndarray:
@@ -370,6 +445,17 @@ class JaxTriangularSolver:
         if self.jit_schedule:
             return self._run_fused("single", jnp.asarray(vals),
                                    jnp.asarray(b), fwd, bwd, sid)
+        if self._planar:
+            # pack_planes always allocates, so the donated running buffer
+            # never aliases the caller's rhs
+            vals = jnp.asarray(vals)
+            x = pack_planes(b, vals.dtype)
+            for g in fwd:
+                x = _fwd_group_planar(vals, x, *g)
+            for g in bwd:
+                x = _bwd_group_planar(vals, x, *g)
+            self.last_n_dispatches = len(fwd) + len(bwd) + 2
+            return unpack_planes(x)
         # defensive copy: the jitted group steps donate the rhs buffer, and
         # ``jnp.asarray`` is a no-op on a JAX array already of vals.dtype —
         # without the copy the *caller's* array would be deleted
@@ -389,12 +475,22 @@ class JaxTriangularSolver:
         vals = jnp.asarray(vals_batch)
         fwd, bwd, sid = self._groups_for(rhs_pattern)
         b = jnp.asarray(b_batch)
-        if vals.ndim != 2 or b.ndim != 2 or vals.shape[0] != b.shape[0]:
+        want = 3 if self._planar else 2
+        if vals.ndim != want or b.ndim != 2 or vals.shape[0] != b.shape[0]:
+            shape = "(B, nnz, 2)" if self._planar else "(B, nnz)"
             raise ValueError(
-                f"expected (B, nnz) values and (B, n) rhs, got "
+                f"expected {shape} values and (B, n) rhs, got "
                 f"{vals.shape} and {b.shape}")
         if self.jit_schedule:
             return self._run_fused("batched", vals, b, fwd, bwd, sid)
+        if self._planar:
+            x = pack_planes(b, vals.dtype)
+            for g in fwd:
+                x = _fwd_group_planar_batched(vals, x, *g)
+            for g in bwd:
+                x = _bwd_group_planar_batched(vals, x, *g)
+            self.last_n_dispatches = len(fwd) + len(bwd) + 2
+            return unpack_planes(x)
         # defensive copy — same donation hazard as :meth:`solve`
         x = jnp.array(b, dtype=vals.dtype, copy=True)
         for g in fwd:
@@ -413,12 +509,22 @@ class JaxTriangularSolver:
         vals = jnp.asarray(vals)
         fwd, bwd, sid = self._groups_for(rhs_pattern)
         b = jnp.asarray(b_multi)
-        if vals.ndim != 1 or b.ndim != 2:
+        want = 2 if self._planar else 1
+        if vals.ndim != want or b.ndim != 2:
+            shape = "(nnz, 2)" if self._planar else "(nnz,)"
             raise ValueError(
-                f"expected (nnz,) values and (K, n) rhs, got "
+                f"expected {shape} values and (K, n) rhs, got "
                 f"{vals.shape} and {b.shape}")
         if self.jit_schedule:
             return self._run_fused("multi", vals, b, fwd, bwd, sid)
+        if self._planar:
+            x = pack_planes(b, vals.dtype)
+            for g in fwd:
+                x = _fwd_group_planar_multi(vals, x, *g)
+            for g in bwd:
+                x = _bwd_group_planar_multi(vals, x, *g)
+            self.last_n_dispatches = len(fwd) + len(bwd) + 2
+            return unpack_planes(x)
         x = jnp.array(b, dtype=vals.dtype, copy=True)
         for g in fwd:
             x = _fwd_group_multi(vals, x, *g)
@@ -437,7 +543,10 @@ class JaxTriangularSolver:
         crosses to the host once per ``sync_every`` sweeps — the common
         ``max_iter <= sync_every`` case pays exactly one transfer."""
         n = self.plan.n
-        b = jnp.asarray(b, dtype=vals.dtype)
+        # planar factors still refine against the NATIVE complex system:
+        # casting b to vals.dtype would truncate a complex rhs to the real
+        # plane dtype, so the cast targets the interface dtype instead
+        b = jnp.asarray(b, dtype=self._iface_dtype(vals))
         if kind == "single":
             solve = self.solve
             res_fn = _residual_berr

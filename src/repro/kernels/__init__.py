@@ -1,6 +1,6 @@
 # Pallas TPU kernels for the paper's compute hot spots.
 from . import ops, ref
-from .dense_lu import dense_lu
+from .dense_lu import dense_lu, dense_lu_planar
 from .level_update import segmented_accumulate
 
-__all__ = ["ops", "ref", "dense_lu", "segmented_accumulate"]
+__all__ = ["ops", "ref", "dense_lu", "dense_lu_planar", "segmented_accumulate"]

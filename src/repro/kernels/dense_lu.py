@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dense_lu", "DEFAULT_BLOCK"]
+__all__ = ["dense_lu", "dense_lu_planar", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = 128
 
@@ -98,5 +98,114 @@ def dense_lu(a, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((N, N), a.dtype),
+        interpret=interpret,
+    )(a)
+
+
+# --------------------------------------------------------------------------
+# Planar complex twin: the SAME blocked algorithm on split re/im planes.
+# The kernel sees only real operands — complex multiply is 4 real matmuls +
+# sign on the MXU, the pivot reciprocal is conj(p) / (re^2 + im^2) — which
+# is what lets complex dense tails stay on the Pallas path (TPU kernels take
+# no complex operands).
+# --------------------------------------------------------------------------
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _panel_factor_planar(mr, mi, k0, B, N):
+    """Planar twin of :func:`_panel_factor` on (N, N) re/im planes."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (N, 1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, N), 1)
+
+    def col_step(jj, m):
+        mr, mi = m
+        j = k0 + jj
+        pr, pi = mr[j, j], mi[j, j]
+        inv = 1.0 / (pr * pr + pi * pi)
+        cr = mr[:, j][:, None]
+        ci = mi[:, j][:, None]
+        qr = (cr * pr + ci * pi) * inv
+        qi = (ci * pr - cr * pi) * inv
+        lr = jnp.where(rows > j, qr, cr)
+        li = jnp.where(rows > j, qi, ci)
+        mr = jax.lax.dynamic_update_slice(mr, lr, (0, j))
+        mi = jax.lax.dynamic_update_slice(mi, li, (0, j))
+        # rank-1 update restricted to the remaining panel columns
+        row_mask = (cols > j) & (cols < k0 + B)
+        rr = jnp.where(row_mask, mr[j, :][None, :], 0.0)
+        ri = jnp.where(row_mask, mi[j, :][None, :], 0.0)
+        lmr = jnp.where(rows > j, lr, 0.0)
+        lmi = jnp.where(rows > j, li, 0.0)
+        ur, ui = _cmul(lmr, lmi, rr, ri)
+        return mr - ur, mi - ui
+
+    return jax.lax.fori_loop(0, B, col_step, (mr, mi))
+
+
+def _trsm_rows_planar(mr, mi, k0, B, N):
+    """Planar twin of :func:`_trsm_rows`."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, N), 1)
+
+    def row_step(ii, m):
+        mr, mi = m
+        i = k0 + ii
+        accr = jnp.zeros((1, N), mr.dtype)
+        acci = jnp.zeros((1, N), mi.dtype)
+
+        def inner(tt, acc):
+            accr, acci = acc
+            t = k0 + tt
+            lr, li = mr[i, t], mi[i, t]
+            tr = jnp.where(cols >= k0 + B, mr[t, :][None, :], 0.0)
+            ti = jnp.where(cols >= k0 + B, mi[t, :][None, :], 0.0)
+            return accr + (lr * tr - li * ti), acci + (lr * ti + li * tr)
+
+        accr, acci = jax.lax.fori_loop(0, ii, inner, (accr, acci))
+        nr = mr[i, :][None, :] - accr
+        ni = mi[i, :][None, :] - acci
+        nr = jnp.where(cols >= k0 + B, nr, mr[i, :][None, :])
+        ni = jnp.where(cols >= k0 + B, ni, mi[i, :][None, :])
+        return (jax.lax.dynamic_update_slice(mr, nr, (i, 0)),
+                jax.lax.dynamic_update_slice(mi, ni, (i, 0)))
+
+    return jax.lax.fori_loop(0, B, row_step, (mr, mi))
+
+
+def _lu_kernel_planar(a_ref, out_ref, *, N: int, B: int):
+    m = a_ref[...]                               # (2, N, N)
+    mr, mi = m[0], m[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (N, 1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, N), 1)
+    nblk = N // B
+    for kb in range(nblk):
+        k0 = kb * B
+        mr, mi = _panel_factor_planar(mr, mi, k0, B, N)
+        if kb < nblk - 1:
+            mr, mi = _trsm_rows_planar(mr, mi, k0, B, N)
+            # trailing update A22 -= L21 @ U12: 4 real matmuls on the MXU
+            lmask = (rows >= k0 + B) & (cols >= k0) & (cols < k0 + B)
+            umask = (rows >= k0) & (rows < k0 + B) & (cols >= k0 + B)
+            L21r = jnp.where(lmask, mr, 0.0)
+            L21i = jnp.where(lmask, mi, 0.0)
+            U12r = jnp.where(umask, mr, 0.0)
+            U12i = jnp.where(umask, mi, 0.0)
+            dot = functools.partial(jnp.dot, preferred_element_type=mr.dtype)
+            mr = mr - (dot(L21r, U12r) - dot(L21i, U12i))
+            mi = mi - (dot(L21r, U12i) + dot(L21i, U12r))
+    out_ref[...] = jnp.stack([mr, mi])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dense_lu_planar(a, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Unpivoted LU of a complex (N, N) tile stored as (2, N, N) planes."""
+    N = a.shape[-1]
+    B = min(block, N)
+    assert a.shape == (2, N, N) and N % B == 0, (a.shape, B)
+    kernel = functools.partial(_lu_kernel_planar, N=N, B=B)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((2, N, N), a.dtype),
         interpret=interpret,
     )(a)

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["level_update_ref", "segmented_accumulate_ref", "dense_lu_ref", "spmv_ref"]
+__all__ = ["level_update_ref", "segmented_accumulate_ref", "dense_lu_ref",
+           "dense_lu_planar_ref", "spmv_ref"]
 
 
 def level_update_ref(vals, norm_idx, norm_diag, lidx, uidx, didx):
@@ -51,6 +52,35 @@ def dense_lu_ref(a):
         row = jnp.where(i > j, m[j, :], 0.0)
         lmask = jnp.where(i > j, lcol, 0.0)
         return m - jnp.outer(lmask, row)
+
+    return jax.lax.fori_loop(0, n, step, a)
+
+
+def dense_lu_planar_ref(a):
+    """Planar twin of :func:`dense_lu_ref`: ``a`` is (2, N, N) split re/im
+    planes of a complex tile.  Complex multiply = 4 real outer products +
+    sign; pivot reciprocal via ``conj(p) / (re^2 + im^2)``."""
+    n = a.shape[-1]
+
+    def step(j, m):
+        mr, mi = m[0], m[1]
+        pr, pi = mr[j, j], mi[j, j]
+        inv = 1.0 / (pr * pr + pi * pi)
+        cr, ci = mr[:, j], mi[:, j]
+        qr = (cr * pr + ci * pi) * inv
+        qi = (ci * pr - cr * pi) * inv
+        i = jnp.arange(n)
+        lr = jnp.where(i > j, qr, cr)
+        li = jnp.where(i > j, qi, ci)
+        mr = mr.at[:, j].set(lr)
+        mi = mi.at[:, j].set(li)
+        rr = jnp.where(i > j, mr[j, :], 0.0)
+        ri = jnp.where(i > j, mi[j, :], 0.0)
+        lmr = jnp.where(i > j, lr, 0.0)
+        lmi = jnp.where(i > j, li, 0.0)
+        mr = mr - (jnp.outer(lmr, rr) - jnp.outer(lmi, ri))
+        mi = mi - (jnp.outer(lmr, ri) + jnp.outer(lmi, rr))
+        return jnp.stack([mr, mi])
 
     return jax.lax.fori_loop(0, n, step, a)
 

@@ -11,6 +11,15 @@ from .gen import (
     rc_ladder,
 )
 from .io import read_matrix_market, write_matrix_market
+from .layout import (
+    ValueLayout,
+    pabs,
+    pack_planes,
+    pdiv,
+    pmul,
+    resolve_layout,
+    unpack_planes,
+)
 
 __all__ = [
     "CSC",
@@ -28,4 +37,11 @@ __all__ = [
     "rc_ladder",
     "read_matrix_market",
     "write_matrix_market",
+    "ValueLayout",
+    "resolve_layout",
+    "pack_planes",
+    "unpack_planes",
+    "pmul",
+    "pdiv",
+    "pabs",
 ]

@@ -1,0 +1,136 @@
+"""Value-storage layouts for the numeric executors.
+
+Two layouts describe how factor values live on device:
+
+* ``native``  — values are stored in their logical dtype.  Real dtypes are
+  unaffected; complex dtypes store interleaved re/im (the JAX/XLA complex
+  representation).  This is the bit-reference path: it runs the exact jitted
+  programs the repo has always run.
+* ``planar``  — complex values are stored as SPLIT real/imaginary planes in
+  a trailing axis of size 2: a logical ``(..., nnz)`` complex array becomes
+  a ``(..., nnz, 2)`` real array (``[..., 0]`` = re, ``[..., 1]`` = im).
+  Every kernel then computes the complex multiply-accumulate on real
+  operands (4 real MACs + sign; reciprocal via ``conj(d) / (re^2 + im^2)``),
+  which is what lets the Pallas TPU kernels — which take no complex
+  operands — run SEGMENTED/PANEL levels and the dense tail for complex128.
+
+Planar storage is an executor-internal representation: the ``GLU`` facade
+packs on entry and unpacks on exit, so callers always see native complex.
+
+Index machinery is layout-agnostic by construction: gathers/scatters on a
+``(nnz, 2)`` array index ROWS, so the same plan index arrays (including the
+pad-index-``== nnz`` drop/fill convention) drive both layouts.
+
+Numerical contract: planar division uses the textbook formula
+``a * conj(b) / |b|^2``.  Unlike XLA's complex division it does not guard
+against overflow of ``|b|^2`` — fine for the factorization values this repo
+scales (MC64 bounds entries by 1), documented here so nobody reuses ``pdiv``
+on unscaled data with ``|b|`` near sqrt(floatmax).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.lax
+import jax.numpy as jnp
+
+__all__ = [
+    "ValueLayout",
+    "resolve_layout",
+    "pack_planes",
+    "unpack_planes",
+    "pmul",
+    "pdiv",
+    "pabs",
+]
+
+_REAL_OF = {
+    np.dtype(np.complex64): np.dtype(np.float32),
+    np.dtype(np.complex128): np.dtype(np.float64),
+}
+_COMPLEX_OF = {v: k for k, v in _REAL_OF.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueLayout:
+    """How factor values of one logical ``dtype`` are stored on device."""
+
+    name: str               # "native" | "planar"
+    dtype: np.dtype         # logical value dtype (what callers see)
+
+    @property
+    def planar(self) -> bool:
+        return self.name == "planar"
+
+    @property
+    def storage_dtype(self) -> np.dtype:
+        """dtype of the on-device value array (the re/im plane dtype for
+        planar complex; the logical dtype otherwise)."""
+        if self.planar:
+            return _REAL_OF[self.dtype]
+        return self.dtype
+
+    def storage_shape(self, *leading) -> tuple:
+        """Shape of the value buffer for a logical ``(*leading,)`` array."""
+        return tuple(leading) + ((2,) if self.planar else ())
+
+
+def resolve_layout(layout, dtype) -> ValueLayout:
+    """Resolve a layout request against a logical value dtype.
+
+    ``"auto"`` picks ``planar`` for complex dtypes (restoring mode-adaptive
+    Pallas execution) and ``native`` for real ones.  ``"planar"`` on a real
+    dtype is rejected — real values have no imaginary plane to split.
+    """
+    if isinstance(layout, ValueLayout):
+        layout = layout.name
+    dt = np.dtype(dtype)
+    is_complex = np.issubdtype(dt, np.complexfloating)
+    if layout == "auto":
+        layout = "planar" if is_complex else "native"
+    if layout not in ("native", "planar"):
+        raise ValueError(
+            f"layout must be 'native', 'planar' or 'auto', got {layout!r}")
+    if layout == "planar" and not is_complex:
+        raise ValueError(
+            f"layout='planar' requires a complex dtype, got {dt} "
+            f"(real values have no imaginary plane)")
+    return ValueLayout(layout, dt)
+
+
+def pack_planes(x, storage_dtype=None):
+    """Logical (complex or real) array -> ``(..., 2)`` re/im planes."""
+    x = jnp.asarray(x)
+    if storage_dtype is None:
+        storage_dtype = _REAL_OF.get(np.dtype(x.dtype), np.dtype(x.dtype))
+    return jnp.stack([jnp.real(x).astype(storage_dtype),
+                      jnp.imag(x).astype(storage_dtype)], axis=-1)
+
+
+def unpack_planes(x):
+    """``(..., 2)`` re/im planes -> native complex array."""
+    x = jnp.asarray(x)
+    return jax.lax.complex(x[..., 0], x[..., 1])
+
+
+def pmul(a, b):
+    """Planar complex multiply: 4 real multiplies + sign on (..., 2)."""
+    ar, ai = a[..., 0], a[..., 1]
+    br, bi = b[..., 0], b[..., 1]
+    return jnp.stack([ar * br - ai * bi, ar * bi + ai * br], axis=-1)
+
+
+def pdiv(a, b):
+    """Planar complex divide: multiply by conj(b), scale by 1/(re^2+im^2)."""
+    ar, ai = a[..., 0], a[..., 1]
+    br, bi = b[..., 0], b[..., 1]
+    inv = 1.0 / (br * br + bi * bi)
+    return jnp.stack([(ar * br + ai * bi) * inv,
+                      (ai * br - ar * bi) * inv], axis=-1)
+
+
+def pabs(a):
+    """Planar complex magnitude: hypot over the trailing plane axis."""
+    return jnp.hypot(a[..., 0], a[..., 1])

@@ -33,7 +33,7 @@ from repro.core import (
     symbolic_fillin_gp,
 )
 from repro.core.plan import MODE_FLAT, MODE_PANEL, MODE_SEGMENTED, choose_buckets
-from repro.sparse import circuit_jacobian
+from repro.sparse import circuit_jacobian, unpack_planes
 
 
 @pytest.fixture(scope="module")
@@ -272,6 +272,52 @@ def test_private_executable_cache_isolated(problem):
     assert fx._runner_key("scatter", False) in private
     # the process-wide cache was never consulted
     assert default_executable_cache().stats.snapshot() == default_stats0
+
+
+def test_executable_cache_layout_keys_disjoint(problem):
+    """Planar and native runners on the SAME plan+dtype must not collide in
+    the executable cache — the layout is part of every runner key."""
+    A, plan, _ = problem
+    a = np.asarray(A.data, dtype=np.complex128) * (1 + 0.5j)
+    cache = ExecutableCache(capacity=16)
+    nat = JaxFactorizer(plan, dtype=jnp.complex128, executable_cache=cache)
+    pla = JaxFactorizer(plan, dtype=jnp.complex128, layout="planar",
+                        executable_cache=cache)
+    kn, kp = nat._runner_key("scatter", False), pla._runner_key("scatter", False)
+    assert kn != kp
+    assert kn[-1] == "native" and kp[-1] == "planar"
+    out_n = np.asarray(nat.factorize(a))
+    builds_nat = cache.stats.builds
+    out_p = np.asarray(unpack_planes(pla.factorize(a)))
+    # planar built its own runner — a key collision would have silently
+    # handed the native runner planar-shaped inputs
+    assert cache.stats.builds > builds_nat
+    np.testing.assert_allclose(out_p, out_n, rtol=1e-12, atol=1e-14)
+    # trisolve keys carry the layout the same way
+    sn = JaxTriangularSolver(plan, executable_cache=cache)
+    sp_ = JaxTriangularSolver(plan, layout="planar", executable_cache=cache)
+    b = np.random.default_rng(9).standard_normal(plan.n).astype(np.complex128)
+    xn = np.asarray(sn.solve(nat.factorize(a), b))
+    xp = np.asarray(sp_.solve(pla.factorize(a), b))
+    np.testing.assert_allclose(xp, xn, rtol=1e-12, atol=1e-14)
+
+
+def test_executable_cache_hit_on_repeated_planar(problem):
+    """A second planar factorizer on the same plan compiles nothing."""
+    A, plan, _ = problem
+    a = np.asarray(A.data, dtype=np.complex128) * (1 - 0.25j)
+    cache = ExecutableCache(capacity=16)
+    fx1 = JaxFactorizer(plan, dtype=jnp.complex128, layout="planar",
+                        executable_cache=cache)
+    out1 = np.asarray(fx1.factorize(a))
+    builds0, hits0 = cache.stats.builds, cache.stats.hits
+    fx2 = JaxFactorizer(plan, dtype=jnp.complex128, layout="planar",
+                        executable_cache=cache)
+    out2 = np.asarray(fx2.factorize(a))
+    assert cache.stats.builds == builds0        # nothing new was built
+    assert cache.stats.hits > hits0
+    assert fx1._runner_for("scatter", False) is fx2._runner_for("scatter", False)
+    assert out1.tobytes() == out2.tobytes()
 
 
 def test_executable_cache_lru_eviction():

@@ -1,0 +1,155 @@
+"""Value-layout abstraction: planar re/im plane storage vs native complex.
+
+Covers the layout module itself (pack/unpack roundtrip, planar arithmetic
+against native complex ops, dtype resolution) and the facade-level layout
+selection contract: ``auto`` goes planar exactly for complex dtypes under
+mode-adaptive (``use_pallas``) execution, the public interface stays native
+complex, and any Pallas downgrade is surfaced via
+``solve_info["pallas_disabled_reason"]`` instead of silently applied.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import GLU, JaxFactorizer, build_plan, symbolic_fillin_gp
+from repro.core.plan import MODE_FLAT, MODE_SEGMENTED, MODE_PANEL
+from repro.sparse import (
+    ValueLayout,
+    circuit_jacobian,
+    pabs,
+    pack_planes,
+    pdiv,
+    pmul,
+    resolve_layout,
+    unpack_planes,
+)
+
+# -- layout module --------------------------------------------------------
+def test_resolve_layout_auto_and_errors():
+    assert resolve_layout("auto", np.complex128) == ValueLayout(
+        "planar", np.dtype(np.complex128))
+    assert resolve_layout("auto", np.float64) == ValueLayout(
+        "native", np.dtype(np.float64))
+    assert resolve_layout("native", np.complex64).storage_dtype == \
+        np.dtype(np.complex64)
+    with pytest.raises(ValueError):
+        resolve_layout("planar", np.float64)      # planar needs complex
+    with pytest.raises(ValueError):
+        resolve_layout("interleaved", np.complex128)
+
+
+def test_planar_storage_shape_and_dtype():
+    lay = resolve_layout("planar", np.complex128)
+    assert lay.planar
+    assert lay.storage_dtype == np.dtype(np.float64)
+    assert lay.storage_shape(7) == (7, 2)
+    assert lay.storage_shape(3, 7) == (3, 7, 2)
+    nat = resolve_layout("native", np.complex128)
+    assert not nat.planar and nat.storage_shape(7) == (7,)
+    c64 = resolve_layout("planar", np.complex64)
+    assert c64.storage_dtype == np.dtype(np.float32)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    z = rng.standard_normal((5, 3)) + 1j * rng.standard_normal((5, 3))
+    p = pack_planes(z)
+    assert p.shape == (5, 3, 2) and p.dtype == jnp.float64
+    np.testing.assert_array_equal(np.asarray(unpack_planes(p)), z)
+    # real input packs with a zero imaginary plane
+    r = pack_planes(np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(r[..., 1]), np.zeros(4))
+
+
+def test_planar_arithmetic_matches_native():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(64) + 1j * rng.standard_normal(64)
+    b = rng.standard_normal(64) + 1j * rng.standard_normal(64)
+    pa, pb = pack_planes(a), pack_planes(b)
+    np.testing.assert_allclose(np.asarray(unpack_planes(pmul(pa, pb))),
+                               a * b, rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(unpack_planes(pdiv(pa, pb))),
+                               a / b, rtol=1e-13)
+    np.testing.assert_allclose(np.asarray(pabs(pa)), np.abs(a), rtol=1e-14)
+
+
+# -- facade layout selection and downgrade surfacing ----------------------
+@pytest.fixture(scope="module")
+def complex_problem():
+    rng = np.random.default_rng(7)
+    A = circuit_jacobian(90, avg_degree=4.0, seed=5)
+    Ac = dataclasses.replace(
+        A, data=A.data.astype(np.complex128)
+        * np.exp(1j * rng.uniform(-np.pi, np.pi, A.nnz)))
+    return Ac
+
+
+def test_auto_layout_selection(complex_problem):
+    Ac = complex_problem
+    # complex + mode-adaptive -> planar, fully on the Pallas path
+    g = GLU(Ac, dtype=jnp.complex128, use_pallas=True)
+    assert g.layout.name == "planar"
+    info = g.factorize().solve_info
+    assert info["layout"] == "planar"
+    assert info["pallas_disabled_reason"] is None
+    assert info["n_dispatches"] == 1
+    # complex without use_pallas -> native is the faster flat-XLA lowering
+    assert GLU(Ac, dtype=jnp.complex128).layout.name == "native"
+    # real dtype never goes planar
+    A = dataclasses.replace(Ac, data=np.abs(Ac.data))
+    assert GLU(A, dtype=jnp.float64, use_pallas=True).layout.name == "native"
+
+
+def test_pallas_disabled_reason_surfaced(complex_problem):
+    Ac = complex_problem
+    cases = [
+        (dict(dtype=jnp.complex128, use_pallas=False), "use_pallas"),
+        (dict(dtype=jnp.complex128, use_pallas=True, layout="native"),
+         "layout='native'"),
+        (dict(dtype=jnp.complex128, use_pallas=True, layout="planar",
+              mode_override=MODE_FLAT), "mode_override"),
+    ]
+    for kwargs, needle in cases:
+        g = GLU(Ac, **kwargs)
+        reason = g._factorizer.pallas_disabled_reason
+        assert reason is not None and needle in reason, (kwargs, reason)
+        assert g.factorize().solve_info["pallas_disabled_reason"] == reason
+    # disable_modes is an executor-level knob
+    plan = build_plan(symbolic_fillin_gp(Ac))
+    fx = JaxFactorizer(plan, dtype=jnp.complex128, use_pallas=True,
+                       layout="planar",
+                       disable_modes=(MODE_SEGMENTED, MODE_PANEL))
+    assert "disable_modes" in fx.pallas_disabled_reason
+
+
+def test_planar_facade_interface_stays_native(complex_problem):
+    Ac = complex_problem
+    rng = np.random.default_rng(3)
+    b = rng.standard_normal(Ac.n) + 1j * rng.standard_normal(Ac.n)
+    g = GLU(Ac, dtype=jnp.complex128, use_pallas=True, refine=2)
+    gn = GLU(Ac, dtype=jnp.complex128, layout="native", refine=2)
+    x, xn = g.solve(b), gn.solve(b)
+    assert np.asarray(x).dtype == np.complex128
+    np.testing.assert_allclose(x, xn, rtol=1e-12, atol=1e-14)
+    fv = g.factorized_values()
+    assert fv.dtype == jnp.complex128 and fv.shape == (g.nnz_filled,)
+    # raw device storage really is planes
+    assert g._vals.shape == (g.nnz_filled, 2)
+    assert g.solve_info["backward_error"] <= 1e-12
+    # batched twin
+    batch = np.stack([Ac.data, 1.5 * Ac.data])
+    g.factorize_batched(batch)
+    xb = g.solve_batched(np.stack([b, 2 * b]))
+    # entry 1 solves (1.5 A) x = 2 b  ->  x = (2/1.5) A^{-1} b
+    np.testing.assert_allclose(xb[1] * 0.75, xn, rtol=1e-10, atol=1e-12)
+    assert g.factorized_values_batched().dtype == jnp.complex128
+
+
+def test_executor_rejects_planar_for_real_dtype():
+    A = circuit_jacobian(40, avg_degree=3.0, seed=2)
+    plan = build_plan(symbolic_fillin_gp(A))
+    with pytest.raises(ValueError):
+        JaxFactorizer(plan, dtype=jnp.float64, layout="planar")

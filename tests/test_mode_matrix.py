@@ -5,8 +5,12 @@ Sweeps every executor knob combination — ``fuse_levels`` on/off,
 ``mode_override`` — against the sequential host oracle
 ``factorize_numpy`` on generated circuit-like matrices, and asserts by
 name that every ``_Group`` kind (``scan``/``flat``/``pallas``/``dense``)
-is exercised somewhere in the sweep.
+is exercised somewhere in the sweep.  The complex128 half of the matrix
+runs the same sweep on planar re/im-plane storage, cross-checked against
+the native-complex reference path and a scipy ``splu`` solve oracle.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -20,7 +24,7 @@ from repro.core import (
     symbolic_fillin_gp,
 )
 from repro.core.plan import MODE_FLAT, MODE_PANEL, MODE_SEGMENTED
-from repro.sparse import circuit_jacobian
+from repro.sparse import circuit_jacobian, unpack_planes
 
 OVERRIDES = [None, MODE_FLAT, MODE_SEGMENTED, MODE_PANEL]
 
@@ -129,3 +133,113 @@ def test_every_group_kind_exercised(problem, dense_problem):
         pytest.skip("no dense tail found for this instance")
     kinds.update(g.kind for g in fx._groups)
     assert kinds >= {"scan", "flat", "pallas", "dense"}, kinds
+
+
+# -- complex128 planar half of the matrix ---------------------------------
+def _complexify(A, seed):
+    rng = np.random.default_rng(seed)
+    phase = np.exp(1j * rng.uniform(-np.pi, np.pi, A.nnz))
+    return dataclasses.replace(A, data=A.data.astype(np.complex128) * phase)
+
+
+@pytest.fixture(scope="module")
+def complex_problem(problem):
+    A, plan, _ = problem
+    Ac = _complexify(A, 33)
+    As = symbolic_fillin_gp(Ac)
+    oracle = factorize_numpy(As, As.filled_csc(Ac).data)
+    # the native-complex flat-XLA path is the bit-reference for planar
+    native = np.asarray(JaxFactorizer(plan, dtype=jnp.complex128)
+                        .factorize(Ac.data))
+    return Ac, plan, oracle, native
+
+
+@pytest.fixture(scope="module")
+def complex_dense_problem(dense_problem):
+    A, plan, _ = dense_problem
+    Ac = _complexify(A, 34)
+    As = symbolic_fillin_gp(Ac)
+    oracle = factorize_numpy(As, As.filled_csc(Ac).data)
+    return Ac, plan, oracle
+
+
+@pytest.mark.parametrize("mode_override", OVERRIDES,
+                         ids=[o or "auto" for o in OVERRIDES])
+@pytest.mark.parametrize("use_pallas", [
+    pytest.param(False, id="xla"),
+    pytest.param(True, id="pallas", marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("fuse_levels", [False, True], ids=["nofuse", "fuse"])
+def test_mode_matrix_complex_planar(complex_problem, fuse_levels, use_pallas,
+                                    mode_override):
+    Ac, plan, oracle, native = complex_problem
+    fx = JaxFactorizer(
+        plan,
+        dtype=jnp.complex128,
+        layout="planar",
+        fuse_levels=fuse_levels,
+        use_pallas=use_pallas,
+        mode_override=mode_override,
+        interpret=True,
+    )
+    assert fx.layout.planar
+    if use_pallas and mode_override in (MODE_SEGMENTED, MODE_PANEL):
+        assert any(g.kind == "pallas" for g in fx._groups)
+        assert fx.pallas_disabled_reason is None
+    raw = fx.factorize(np.asarray(Ac.data))
+    assert raw.shape == (len(oracle), 2)       # planes on device
+    out = np.asarray(unpack_planes(raw))
+    np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(out, native, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("use_pallas", [
+    pytest.param(False, id="xla"),
+    pytest.param(True, id="pallas", marks=pytest.mark.slow),
+])
+def test_complex_planar_dense_tail(complex_dense_problem, use_pallas):
+    Ac, plan, oracle = complex_dense_problem
+    fx = JaxFactorizer(plan, dtype=jnp.complex128, layout="planar",
+                       dense_tail=True, use_pallas=use_pallas, interpret=True)
+    if fx.dense_tail_info is None:
+        pytest.skip("no dense tail found for this instance")
+    assert any(g.kind == "dense" for g in fx._groups)
+    out = np.asarray(unpack_planes(fx.factorize(np.asarray(Ac.data))))
+    np.testing.assert_allclose(out, oracle, rtol=1e-10, atol=1e-10)
+
+
+def test_every_group_kind_exercised_planar(complex_problem,
+                                           complex_dense_problem):
+    """The planar executor reaches the same step-kind space as native."""
+    _, plan, _, _ = complex_problem
+    _, dense_plan, _ = complex_dense_problem
+    def mk(p, **kw):
+        return JaxFactorizer(p, dtype=jnp.complex128, layout="planar", **kw)
+
+    kinds = set()
+    kinds.update(g.kind for g in mk(plan, fuse_levels=True)._groups)
+    kinds.update(g.kind for g in mk(plan, fuse_levels=False)._groups)
+    kinds.update(g.kind for g in mk(plan, use_pallas=True)._groups)
+    fx = mk(dense_plan, dense_tail=True)
+    if fx.dense_tail_info is None:
+        pytest.skip("no dense tail found for this instance")
+    kinds.update(g.kind for g in fx._groups)
+    assert kinds >= {"scan", "flat", "pallas", "dense"}, kinds
+
+
+def test_complex_planar_solution_matches_scipy(complex_problem):
+    """End-to-end planar solve against an external scipy splu oracle."""
+    import scipy.sparse as sp
+    import scipy.sparse.linalg as spla
+
+    from repro.core import GLU
+
+    Ac, _, _, _ = complex_problem
+    rng = np.random.default_rng(6)
+    b = rng.standard_normal(Ac.n) + 1j * rng.standard_normal(Ac.n)
+    g = GLU(Ac, dtype=jnp.complex128, use_pallas=True, refine=1)
+    assert g.layout.name == "planar"
+    x = np.asarray(g.solve(b))
+    A = sp.csc_matrix((Ac.data, Ac.indices, Ac.indptr), shape=(Ac.n, Ac.n))
+    x_ref = spla.splu(A.tocsc()).solve(b)
+    np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-11)
