@@ -25,9 +25,21 @@ DEFAULT_GATE_PREFIXES = ("factorize_", "ac_")
 
 
 def load_rows(path: str) -> dict:
+    """Rows by name; malformed entries (no name / non-numeric us_per_call,
+    e.g. from a hand-edited artifact) are warned about and skipped rather
+    than crashing the gate."""
     with open(path) as f:
         rows = json.load(f)
-    return {r["name"]: r for r in rows}
+    out = {}
+    for r in rows:
+        name = r.get("name") if isinstance(r, dict) else None
+        us = r.get("us_per_call") if isinstance(r, dict) else None
+        if not isinstance(name, str) or not isinstance(us, (int, float)):
+            print(f"# WARN: {path}: skipping malformed row {r!r}",
+                  file=sys.stderr)
+            continue
+        out[name] = r
+    return out
 
 
 def find_latest_pair(directory: str):
@@ -61,10 +73,17 @@ def diff(old_path: str, new_path: str, threshold: float = 1.3,
         o, n = old.get(name), new.get(name)
         gated = is_gated(name, gate_prefixes)
         if o is None or n is None:
+            # one-sided row (benchmark added or removed between artifacts):
+            # there is no ratio to gate on, so warn and skip — even for
+            # gated prefixes.  A removed gated row is worth a louder look,
+            # hence the stderr note rather than silence.
             ou = "-" if o is None else format(o["us_per_call"], ".1f")
             nu = "-" if n is None else format(n["us_per_call"], ".1f")
-            print(f"{name},{ou},{nu},-,{'yes' if gated else 'no'},"
-                  f"{'added' if o is None else 'removed'}")
+            status = "added" if o is None else "removed"
+            print(f"{name},{ou},{nu},-,{'yes' if gated else 'no'},{status}")
+            print(f"# WARN: {name} only in "
+                  f"{new_path if o is None else old_path} ({status}); "
+                  f"skipped from the gate", file=sys.stderr)
             continue
         ou, nu = o["us_per_call"], n["us_per_call"]
         ratio = nu / ou if ou > 0 else float("inf")

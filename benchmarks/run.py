@@ -20,6 +20,7 @@ def _sections():
         bench_modes,
         bench_robustness,
         bench_sparse_rhs,
+        bench_sweep_sharded,
         bench_threshold,
         bench_transient,
     )
@@ -50,6 +51,9 @@ def _sections():
         ("sparse_rhs",
          "=== Sparse-RHS trisolve: reach-pruned vs full schedule ===",
          bench_sparse_rhs.main),
+        ("sweep_sharded",
+         "=== Sharded sweep scaling (emulated multi-device) ===",
+         bench_sweep_sharded.main),
     ]
 
 

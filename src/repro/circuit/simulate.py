@@ -263,6 +263,7 @@ class TransientSweepResult:
     plan_cache_hits: int = 0    # GLU constructions served by the plan cache
     n_full_rebuilds: int = 0    # ALL ladder-triggered rebuilds (rungs 1-3)
     ladder_counts: Optional[dict] = None  # per-rung action counts
+    n_devices: int = 1          # devices the batch axis was sharded over
 
 
 def perturbed_copies(ckt: Circuit, scales) -> list:
@@ -298,6 +299,7 @@ def transient_sweep(
     mc64="scale",
     escalation: str = "ladder",
     ladder_config: Optional[LadderConfig] = None,
+    mesh=None,
 ) -> TransientSweepResult:
     """Run B parameter-perturbed copies of ``ckt`` through backward-Euler +
     Newton in lockstep on ONE symbolic plan (the Monte-Carlo / corner-sweep
@@ -311,6 +313,15 @@ def transient_sweep(
     climbs re-scale -> bump -> replan on unhealthy diagnostics, with the
     worst copy of the batch as the rebuild's scaling representative (one
     shared plan, so one representative picks the scaling).
+
+    ``mesh`` shards the scenario (batch) axis of every batched
+    refactorize/solve across the mesh's devices (see ``GLU``'s ``mesh``
+    parameter); ladder rebuilds inherit it through ``glu_kwargs``.  The
+    Newton loop tracks a per-scenario convergence mask: a converged copy's
+    Jacobian is no longer re-assembled and its iterate is frozen, so
+    convergence of one shard's scenarios never depends on a global
+    ``all()`` re-deriving them — the batch still solves as one lockstep
+    dispatch until every copy has converged.
     """
     import jax.numpy as jnp
 
@@ -328,7 +339,7 @@ def transient_sweep(
 
     glu_kwargs = dict(ordering=ordering, dtype=dtype, use_pallas=use_pallas,
                       refine=refine or 0, refine_tol=refine_tol,
-                      static_pivot=static_pivot, mc64=mc64)
+                      static_pivot=static_pivot, mc64=mc64, mesh=mesh)
     ladder = _make_ladder(escalation, ladder_config)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals0), **glu_kwargs)
     n_plan_hits = int(glu.plan_from_cache)
@@ -354,8 +365,19 @@ def transient_sweep(
     for s, t in enumerate(times):
         v_it = v_prev.copy()
         rescaled_this_step = False
+        # per-scenario convergence mask: once a copy's Newton update drops
+        # below tol its Jacobian stops being re-assembled and its iterate is
+        # frozen (masked back after each lockstep solve), so one slow copy
+        # never makes the converged ones re-derive their solution — the
+        # batch itself still solves as ONE dispatch per iterate
+        active = np.ones(B, dtype=bool)
         for it in range(max_newton):
-            vals, rhs = assemble_all(v_it, v_prev, float(t))
+            if it == 0:
+                vals, rhs = assemble_all(v_it, v_prev, float(t))
+            else:
+                for k in np.flatnonzero(active):
+                    vals[k], rhs[k] = ckts[k].assemble(
+                        v_it[k], v_prev[k], dt, float(t))
             v_new = glu.refactorize_solve(vals, rhs)
             n_fact += 1
             if ladder is not None:
@@ -406,9 +428,11 @@ def transient_sweep(
                         n_plan_hits += int(glu.plan_from_cache)
                         v_new = glu.refactorize_solve(vals, rhs)
                         n_fact += 1
-            dv = np.abs(v_new - v_it).max()
+            v_new = np.where(active[:, None], v_new, v_it)
+            dv_rows = np.abs(v_new - v_it).max(axis=1)
             v_it = v_new
-            if dv < newton_tol:
+            active &= dv_rows >= newton_tol
+            if not active.any():
                 break
         iters[s] = it + 1
         vals, rhs = assemble_all(v_it, v_prev, float(t))
@@ -435,6 +459,7 @@ def transient_sweep(
         plan_cache_hits=n_plan_hits,
         n_full_rebuilds=0 if ladder is None else ladder.n_full_rebuilds,
         ladder_counts=counts,
+        n_devices=glu.n_devices if B > 1 else 1,
     )
 
 
@@ -464,6 +489,7 @@ class ACSweepResult:
     op_converged: bool = True    # DC operating-point Newton loop met newton_tol
     n_full_rebuilds: int = 0     # ladder-triggered rebuilds (DC + AC phases)
     ladder_counts: Optional[dict] = None  # per-rung action counts
+    n_devices: int = 1           # devices the frequency axis was sharded over
 
 
 def ac_sweep(
@@ -480,6 +506,7 @@ def ac_sweep(
     escalation: str = "ladder",
     ladder_config: Optional[LadderConfig] = None,
     layout: str = "auto",
+    mesh=None,
 ) -> ACSweepResult:
     """AC small-signal frequency sweep: ``A(w) x(w) = b`` at every point.
 
@@ -511,6 +538,10 @@ def ac_sweep(
     keeps mode-adaptive Pallas execution active for the complex systems
     (and stays native otherwise); ``"native"`` forces the flat-XLA
     native-complex reference path.
+
+    ``mesh`` shards the frequency (scenario) axis of the batched AC
+    refactorize/solve across the mesh's devices; the single-matrix DC
+    operating-point phase always runs on one device.
     """
     import jax.numpy as jnp
 
@@ -590,7 +621,7 @@ def ac_sweep(
     ac_kwargs = dict(ordering=ordering, dtype=jnp.complex128,
                      use_pallas=use_pallas, refine=refine,
                      refine_tol=refine_tol, static_pivot=static_pivot,
-                     mc64=mc64, layout=layout)
+                     mc64=mc64, layout=layout, mesh=mesh)
     glu = GLU(CSC(pat.n, pat.indptr, pat.indices, vals_ac[0]),
               **(ac_kwargs if ladder is None
                  else ladder.glu_kwargs(ac_kwargs)))
@@ -660,4 +691,5 @@ def ac_sweep(
         n_full_rebuilds=0 if ladder is None else ladder.n_full_rebuilds,
         ladder_counts=(_empty_ladder_counts() if ladder is None
                        else dict(ladder.counts)),
+        n_devices=glu.n_devices if len(freqs) > 1 else 1,
     )

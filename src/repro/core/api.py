@@ -37,6 +37,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from ..distributed.scenario import make_scenario_sharding
 from ..sparse.csc import CSC
 from ..sparse.layout import resolve_layout, unpack_planes
 from .factorize import JaxFactorizer
@@ -98,6 +99,7 @@ class GLU:
         interpret: bool = True,
         plan_cache="default",
         layout: str = "auto",
+        mesh=None,
     ):
         """``mc64``: ``"scale"``/``True`` — full Duff-Koster max-product
         matching with Dr/Dc scalings; ``"structural"`` — zero-free diagonal
@@ -140,6 +142,17 @@ class GLU:
         faster flat-XLA lowering.  ``"native"``/``"planar"`` force either
         path.  The public interface (``solve``, ``factorized_values``,
         refinement) always speaks native complex regardless.
+
+        ``mesh``: a ``jax.sharding.Mesh`` to shard BATCHED factorize/solve
+        calls over — the batch (scenario) axis splits along the mesh axes
+        the ``"scenario"`` rule of ``repro.distributed.DEFAULT_RULES``
+        resolves to (``("pod", "data")``), plan metadata is replicated, and
+        each shard runs the whole fused schedule in its single dispatch.
+        Batches not divisible by the shard count are padded with copies of
+        the last scenario and the pad rows are masked out of results and
+        diagnostics.  ``None`` (default) or a mesh resolving to one shard
+        runs everything on the default device.  Single-matrix calls are
+        never sharded.
         """
         plan, scaling, from_cache = plan_factorization(
             A, ordering=ordering, symbolic=symbolic, mc64=mc64,
@@ -151,7 +164,8 @@ class GLU:
             executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
-            mode_override=mode_override, interpret=interpret, layout=layout)
+            mode_override=mode_override, interpret=interpret, layout=layout,
+            mesh=mesh)
 
     @classmethod
     def from_plan(
@@ -174,6 +188,7 @@ class GLU:
         mode_override: Optional[str] = None,
         interpret: bool = True,
         layout: str = "auto",
+        mesh=None,
     ) -> "GLU":
         """Build a GLU around a prebuilt :class:`SymbolicPlan`, skipping all
         symbolic work.
@@ -199,7 +214,8 @@ class GLU:
             executable_cache=executable_cache, use_pallas=use_pallas,
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
-            mode_override=mode_override, interpret=interpret, layout=layout)
+            mode_override=mode_override, interpret=interpret, layout=layout,
+            mesh=mesh)
         return self
 
     def _setup(
@@ -223,6 +239,7 @@ class GLU:
         mode_override: Optional[str],
         interpret: bool,
         layout: str,
+        mesh=None,
     ) -> None:
         # resolve the effective dtype ONCE; a float64/complex128 request
         # without x64 enabled raises here instead of silently degrading
@@ -262,6 +279,10 @@ class GLU:
         self.pattern = plan.pattern
         self.levelization = plan.levelization
         self.plan = plan.fplan
+        # scenario sharding: None unless a mesh with >1 scenario shards was
+        # given; sharding only ever applies to the batched entry points
+        self.mesh = mesh
+        self._shard = make_scenario_sharding(mesh)
         self._factorizer = JaxFactorizer(
             self.plan, dtype=dtype, fuse_levels=fuse_levels,
             fuse_buckets=fuse_buckets, bucket_waste=bucket_waste,
@@ -269,18 +290,24 @@ class GLU:
             use_pallas=use_pallas, mode_override=mode_override,
             interpret=interpret, dense_tail=dense_tail,
             dense_tail_density=dense_tail_density, static_pivot=static_pivot,
-            layout=self.layout.name,
+            layout=self.layout.name, shard=self._shard,
         )
         self._solver = JaxTriangularSolver(
             self.plan, fuse=fuse_levels, fuse_buckets=fuse_buckets,
             bucket_waste=bucket_waste, jit_schedule=jit_schedule,
-            executable_cache=executable_cache, layout=self.layout.name)
+            executable_cache=executable_cache, layout=self.layout.name,
+            shard=self._shard)
         self._vals: Optional[jnp.ndarray] = None
         self._vals_batch: Optional[jnp.ndarray] = None
         self._a_vals: Optional[jnp.ndarray] = None
         self._a_abs: Optional[jnp.ndarray] = None
         self._a_vals_batch: Optional[jnp.ndarray] = None
         self._a_abs_batch: Optional[jnp.ndarray] = None
+        # batch geometry of the current batched factorization: the caller's
+        # B, the padded total held on device, and their difference
+        self._batch_size: Optional[int] = None
+        self._batch_total: Optional[int] = None
+        self._batch_pad: int = 0
         self.dtype = dtype
         self.refine_default = int(refine)
         self.refine_tol = (float(refine_tol) if refine_tol is not None
@@ -306,6 +333,8 @@ class GLU:
         self._vals_batch = None
         self._a_vals_batch = None
         self._a_abs_batch = None
+        self._batch_size = self._batch_total = None
+        self._batch_pad = 0
         self._set_fact_info(self._vals, self._a_vals, batched=False)
         return self
 
@@ -424,7 +453,28 @@ class GLU:
             scaled = data[:, self._data_perm]
         else:
             scaled = (data * self._scale_data[None, :])[:, self._data_perm]
+        B = scaled.shape[0]
+        self._batch_size = self._batch_total = B
+        self._batch_pad = 0
+        if self._shard is not None and B > 1:
+            # non-divisible batches are padded with copies of the LAST
+            # scenario (a known-factorizable system, so the pad rows can
+            # never poison diagnostics with inf/NaN) and masked out of
+            # results and convergence below — the scenario-axis analogue of
+            # the silent-replicate rule in distributed/sharding.py.  B == 1
+            # stays unsharded: padding a single matrix across the mesh buys
+            # nothing.
+            total = self._shard.pad(B)
+            if total != B:
+                scaled = np.concatenate(
+                    [scaled, np.repeat(scaled[-1:], total - B, axis=0)])
+            self._batch_total = total
+            self._batch_pad = total - B
         self._a_vals_batch = jnp.asarray(scaled, dtype=self.dtype)
+        if self._shard is not None and self._batch_total % self._shard.n_shards == 0:
+            # place the batch sharded BEFORE dispatch so the runner never
+            # reshuffles it (donation-safe: the runner does not donate it)
+            self._a_vals_batch = self._shard.shard_batch(self._a_vals_batch)
         self._a_abs_batch = None               # lazily built on refined solve
         self._vals_batch = self._factorizer.factorize_batched(self._a_vals_batch)
         self._vals = None
@@ -436,9 +486,12 @@ class GLU:
     def factorized_values_batched(self) -> jnp.ndarray:
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
+        vals = self._vals_batch
+        if self._batch_pad:
+            vals = vals[: self._batch_size]
         if self.layout.planar:
-            return unpack_planes(self._vals_batch)
-        return self._vals_batch
+            return unpack_planes(vals)
+        return vals
 
     def solve_batched(self, b_batch, refine: Optional[int] = None,
                       rhs_pattern=None) -> np.ndarray:
@@ -447,23 +500,43 @@ class GLU:
         ``rhs_pattern`` is shared by the batch (union support)."""
         if self._vals_batch is None:
             raise RuntimeError("call factorize_batched() first")
+        B = np.asarray(b_batch).shape[0]
+        if self._batch_size is not None and B != self._batch_size:
+            raise ValueError(
+                f"rhs batch of {B} does not match the factorized batch of "
+                f"{self._batch_size}")
         k = self.refine_default if refine is None else int(refine)
         pat = self._map_rhs_pattern(rhs_pattern, np.asarray(b_batch))
         bp = (np.asarray(b_batch) * self.Dr[None, :])[:, self._inv_row]
+        if self._batch_pad:
+            # zero rhs rows for the pad scenarios: their solution is exactly
+            # zero (and their backward error 0/0 counts as converged), so
+            # refinement never iterates for them
+            bp = np.concatenate(
+                [bp, np.zeros((self._batch_pad, bp.shape[1]), dtype=bp.dtype)])
+        bpd = jnp.asarray(bp)
+        if (self._shard is not None
+                and bpd.shape[0] % self._shard.n_shards == 0):
+            bpd = self._shard.shard_batch(bpd)
         if k > 0:
             if self._a_abs_batch is None:
                 self._a_abs_batch = jnp.abs(self._a_vals_batch)
             xp, rinfo = self._solver.solve_refined_batched(
-                self._vals_batch, bp, self._spmv_rows, self._spmv_cols,
+                self._vals_batch, bpd, self._spmv_rows, self._spmv_cols,
                 self._a_vals_batch, self._a_abs_batch,
                 max_iter=k, tol=self.refine_tol, rhs_pattern=pat)
             xp = np.asarray(xp)
+            if self._batch_pad:
+                rinfo = {key: (v[:B] if isinstance(v, np.ndarray) else v)
+                         for key, v in rinfo.items()}
         else:
-            xp = np.asarray(self._solver.solve_batched(self._vals_batch, bp,
+            xp = np.asarray(self._solver.solve_batched(self._vals_batch, bpd,
                                                        rhs_pattern=pat))
-            rinfo = {"refine_iters": np.zeros(bp.shape[0], dtype=np.int64),
+            rinfo = {"refine_iters": np.zeros(B, dtype=np.int64),
                      "backward_error": None, "converged": None,
                      "host_syncs": 0}
+        if self._batch_pad:
+            xp = xp[:B]
         self._set_solve_info(rinfo)
         return xp[:, self.col_map] * self.Dc[None, :]
 
@@ -514,6 +587,9 @@ class GLU:
                                self._factorizer.last_a_max,
                                self._factorizer.last_n_perturbed,
                                batched)
+        sharded = (batched and self._shard is not None
+                   and self._batch_total is not None
+                   and self._batch_total % self._shard.n_shards == 0)
         self._info = {
             "batched": batched,
             "pivot_growth": None,
@@ -533,6 +609,15 @@ class GLU:
             # off the Pallas path — why (None means fully active)
             "layout": self.layout.name,
             "pallas_disabled_reason": self._factorizer.pallas_disabled_reason,
+            # scenario-sharding surface: how many devices the batch axis
+            # split over (1 = unsharded) and the PartitionSpec it used.
+            # ``n_perturbed_global`` is the cross-shard exact psum of
+            # static-pivot bumps over the PADDED batch (pad rows duplicate
+            # the last scenario, so their bumps are counted again); None
+            # unless the guard ran sharded.
+            "n_devices": self._shard.n_shards if sharded else 1,
+            "batch_spec": str(self._shard.spec) if sharded else None,
+            "n_perturbed_global": self._factorizer.last_n_perturbed_global,
         }
 
     def _set_solve_info(self, rinfo: dict) -> None:
@@ -543,7 +628,9 @@ class GLU:
                           "n_dispatches": None,
                           "layout": self.layout.name,
                           "pallas_disabled_reason":
-                              self._factorizer.pallas_disabled_reason}
+                              self._factorizer.pallas_disabled_reason,
+                          "n_devices": 1, "batch_spec": None,
+                          "n_perturbed_global": None}
         self._info.update(rinfo)
         self._info["solve_dispatches"] = self._solver.last_n_dispatches
 
@@ -585,6 +672,12 @@ class GLU:
                 fn = (kops.factor_stats_batched if batched
                       else kops.factor_stats)
             growth, min_diag = fn(vals, self._factorizer._diag_idx, a_max)
+            if batched and self._batch_pad:
+                # drop the pad scenarios from the per-matrix diagnostics
+                growth = growth[: self._batch_size]
+                min_diag = min_diag[: self._batch_size]
+                if n_pert is not None:
+                    n_pert = n_pert[: self._batch_size]
             self._info.update(pivot_growth=growth, min_diag=min_diag,
                               n_perturbed=n_pert)
             self._pending_stats = None
@@ -596,6 +689,11 @@ class GLU:
                 a = np.asarray(v)
                 out[key] = a.item() if a.ndim == 0 else a
         return out
+
+    @property
+    def n_devices(self) -> int:
+        """Shard count batched calls split over (1 = unsharded)."""
+        return 1 if self._shard is None else self._shard.n_shards
 
     @property
     def nnz_filled(self) -> int:

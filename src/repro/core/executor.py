@@ -9,11 +9,15 @@ Newton re-scaling rebuild, a sweep corner, a second serving tenant) run
 byte-identical schedules.  This cache keys the jitted callables by
 
   (executor kind, plan digest, entry point, batched, group-kind tuple,
-   dtype, robust, use_pallas, interpret, value layout, ...)
+   dtype, robust, use_pallas, interpret, value layout, shard descriptor,
+   ...)
 
 The value-layout field keeps native-complex and planar re/im-plane
 programs apart — same plan, same dtype string, different array shapes and
-arithmetic.
+arithmetic.  The shard descriptor (mesh shape + device ids + scenario
+axes, or None) keeps shard_map-wrapped batch-parallel programs apart from
+single-device ones — and programs on different meshes apart from each
+other.
 
 so the second construction compiles nothing: it reuses the same callable
 object, whose ``jax.jit`` cache already holds the compiled executable for

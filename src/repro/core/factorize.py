@@ -21,7 +21,10 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from ..distributed.collectives import psum_exact
 from ..sparse.layout import pabs, pack_planes, pdiv, pmul, resolve_layout
 from .executor import resolve_executable_cache
 from .plan import (
@@ -586,7 +589,7 @@ def _apply_schedule_groups(vals, groups, diags, tau, *, kinds, robust,
 
 
 def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
-                            use_pallas, nnz, dtype, planar=False):
+                            use_pallas, nnz, dtype, planar=False, shard=None):
     """One jitted program for the whole schedule.
 
     ``entry="scatter"`` takes A values (nnz_A,) / (B, nnz_A) plus the
@@ -599,6 +602,18 @@ def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
     entry takes logical (native complex) A values and packs them INSIDE the
     jitted program; a "filled" entry takes an already-planar (.., nnz, 2)
     array.  ``dtype`` is then the real plane/storage dtype.
+
+    With ``shard`` (a :class:`~repro.distributed.ScenarioSharding`; batched
+    entries only) the whole program is wrapped in ``shard_map``: the batch
+    axis splits along the scenario mesh axes while the plan metadata
+    (scatter map, group index arrays, diag targets) is replicated, so each
+    shard runs the full fused schedule — ONE dispatch — on its B/n_shards
+    slice.  Every per-matrix reduction (``a_max``, perturbation counts)
+    stays within its own batch row, so the sharded result is bit-identical
+    to the single-device batched program.  The robust path additionally
+    returns the perturbation count summed across the whole (global) batch
+    via an exact psum, so ladder diagnostics see one aggregate without a
+    second dispatch.
     """
 
     def run(a, a_scatter, groups, diags, eps):
@@ -632,11 +647,31 @@ def _build_factorize_runner(kinds, *, entry, batched, robust, interpret,
                 n_pert = jnp.zeros(vals.shape[0], dtype=jnp.int32)
             else:
                 n_pert = jnp.asarray(0, dtype=jnp.int32)
+            if shard is not None:
+                n_pert_global = psum_exact(jnp.sum(n_pert), shard.axis_names)
+                return vals, a_max, n_pert, n_pert_global
             return vals, a_max, n_pert
         return vals
 
     donate = (0,) if entry == "filled" else ()
-    return jax.jit(run, donate_argnums=donate)
+    if shard is None:
+        return jax.jit(run, donate_argnums=donate)
+    if not batched:
+        raise ValueError("scenario sharding requires a batched entry")
+    bspec = shard.spec
+    # batch arg sharded along the scenario axes; plan metadata (scatter map,
+    # group arrays, diag targets, eps) replicated — P() is a pytree-prefix
+    # spec so it covers the nested group tuples (and None leaves) wholesale.
+    in_specs = (bspec, P(), P(), P(), P())
+    if robust:
+        # per-matrix outputs stay batch-sharded; the psum'd global count is
+        # replicated (identical on every shard, so check_rep=False is safe).
+        out_specs = (bspec, bspec, bspec, P())
+    else:
+        out_specs = bspec
+    mapped = shard_map(run, mesh=shard.mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    return jax.jit(mapped, donate_argnums=donate)
 
 
 class JaxFactorizer:
@@ -681,6 +716,12 @@ class JaxFactorizer:
         operands; ``"auto"`` picks planar for complex dtypes.  Planar
         factors come back as ``(nnz, 2)`` / ``(B, nnz, 2)`` real arrays
         (``repro.sparse.unpack_planes`` recovers native complex).
+    shard: optional :class:`~repro.distributed.ScenarioSharding` — batched
+        factorizations shard the batch axis across the mesh (plan metadata
+        replicated, one fused dispatch per shard); unbatched calls and
+        batches not divisible by the shard count run the unsharded
+        executable.  The ExecutableCache key carries the mesh descriptor so
+        sharded and unsharded runners never collide.
     """
 
     def __init__(
@@ -700,8 +741,15 @@ class JaxFactorizer:
         dense_tail_density: float = 0.25,
         static_pivot: Optional[float] = None,
         layout: str = "native",
+        shard=None,
     ):
         self.plan = plan
+        # Scenario sharding: batched entry points split the batch axis over
+        # the shard's mesh (shard_map around the fused runner); unbatched
+        # calls and non-divisible batches fall back to the unsharded
+        # executable.  A 1-shard resolution degenerates to None.
+        self.shard = shard if (shard is not None and shard.n_shards > 1) \
+            else None
         self.dtype = dtype
         self.layout = resolve_layout(layout, dtype)
         self.storage_dtype = self.layout.storage_dtype
@@ -747,6 +795,9 @@ class JaxFactorizer:
         self._diag_idx = jnp.asarray(plan.diag_idx, dtype=jnp.int32)
         self.last_a_max = None
         self.last_n_perturbed = None
+        # global (cross-shard) perturbation count of the most recent sharded
+        # robust factorization; None on unsharded paths
+        self.last_n_perturbed_global = None
 
         pad_key = plan.nnz  # padding index == nnz -> drop/fill semantics
         self.dense_tail_info = None
@@ -867,6 +918,12 @@ class JaxFactorizer:
         self._kinds = tuple(g.kind for g in groups)
         self._group_arrays = tuple(g.arrays for g in groups)
         self._group_diags = tuple(g.diag for g in groups)
+        if self.shard is not None:
+            # plan metadata gets an explicitly replicated NamedSharding so
+            # the sharded runner never re-lays it out per call
+            self._a_scatter = self.shard.replicate(self._a_scatter)
+            self._group_arrays = self.shard.replicate(self._group_arrays)
+            self._group_diags = self.shard.replicate(self._group_diags)
         self.n_groups = len(groups)
         # dispatch count of the most recent factorize* call (1 on the fused
         # path; one per jitted group call — plus entry scatter — otherwise)
@@ -874,32 +931,51 @@ class JaxFactorizer:
 
     # -- whole-schedule fused path -----------------------------------------
 
-    def _runner_key(self, entry: str, batched: bool):
+    def _shard_for_batch(self, batched: bool, batch: Optional[int]):
+        """The ScenarioSharding to run under, or None: sharding applies only
+        to batched entries whose batch divides the shard count (the facade
+        pads; direct callers silently fall back, mirroring the
+        silent-replicate rule in distributed/sharding.py)."""
+        if self.shard is None or not batched:
+            return None
+        if batch is not None and batch % self.shard.n_shards != 0:
+            return None
+        return self.shard
+
+    def _runner_key(self, entry: str, batched: bool, shard=None):
         robust = self.static_pivot is not None
         return ("factorize", self.plan.digest, entry, batched, self._kinds,
                 np.dtype(self.dtype).str, robust, self.use_pallas,
-                self.interpret, self.nnz, self.layout.name)
+                self.interpret, self.nnz,
+                None if shard is None else shard.descriptor,
+                self.layout.name)
 
-    def _runner_for(self, entry: str, batched: bool):
+    def _runner_for(self, entry: str, batched: bool, shard=None):
         robust = self.static_pivot is not None
         return self._exec_cache.get_or_build(
-            self._runner_key(entry, batched),
+            self._runner_key(entry, batched, shard),
             lambda: _build_factorize_runner(
                 self._kinds, entry=entry, batched=batched, robust=robust,
                 interpret=self.interpret, use_pallas=self.use_pallas,
                 nnz=self.nnz, dtype=self.storage_dtype,
-                planar=self.layout.planar))
+                planar=self.layout.planar, shard=shard))
 
     def _factorize_fused(self, a, *, entry: str, batched: bool) -> jnp.ndarray:
         robust = self.static_pivot is not None
-        runner = self._runner_for(entry, batched)
+        shard = self._shard_for_batch(batched, a.shape[0] if batched else None)
+        runner = self._runner_for(entry, batched, shard)
         eps = (jnp.asarray(self.static_pivot, dtype=self.storage_dtype)
                if robust else None)
         out = runner(a, self._a_scatter, self._group_arrays,
                      self._group_diags, eps)
         self.last_n_dispatches = 1
+        self.last_n_perturbed_global = None
         if robust:
-            vals, self.last_a_max, self.last_n_perturbed = out
+            if shard is not None:
+                (vals, self.last_a_max, self.last_n_perturbed,
+                 self.last_n_perturbed_global) = out
+            else:
+                vals, self.last_a_max, self.last_n_perturbed = out
         else:
             vals = out
             self.last_a_max = None
@@ -969,6 +1045,7 @@ class JaxFactorizer:
                 batched=False)
         step = self._jitted_steps(batched=False)
         robust = self.static_pivot is not None
+        self.last_n_perturbed_global = None
         n_dispatch = 0
         if robust:
             mag = pabs(vals) if self.layout.planar else jnp.abs(vals)
@@ -1050,6 +1127,7 @@ class JaxFactorizer:
                 batched=True)
         step = self._jitted_steps(batched=True)
         robust = self.static_pivot is not None
+        self.last_n_perturbed_global = None
         n_dispatch = 0
         if robust:
             mag = pabs(vals) if self.layout.planar else jnp.abs(vals)

@@ -35,6 +35,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from ..kernels.ops import masked_correction, spmv
 from ..sparse.layout import pack_planes, pdiv, pmul, unpack_planes
@@ -221,7 +223,7 @@ def _solve_schedule_planar_body(vals, b, fwd, bwd):
     return unpack_planes(x)
 
 
-def _build_trisolve_runner(kind: str, planar: bool = False):
+def _build_trisolve_runner(kind: str, planar: bool = False, shard=None):
     body = _solve_schedule_planar_body if planar else _solve_schedule_body
     if kind == "single":
         fn = body
@@ -229,6 +231,15 @@ def _build_trisolve_runner(kind: str, planar: bool = False):
         fn = jax.vmap(body, in_axes=(0, 0, None, None))
     else:  # "multi"
         fn = jax.vmap(body, in_axes=(None, 0, None, None))
+    if shard is not None:
+        if kind != "batched":
+            raise ValueError("scenario sharding requires the batched kind")
+        # value and rhs batches split along the scenario axes, the level
+        # schedule is replicated; each shard's trisolve stays one dispatch.
+        # Rows never interact, so the result is bit-identical to unsharded.
+        bspec = shard.spec
+        fn = shard_map(fn, mesh=shard.mesh, in_specs=(bspec, bspec, P(), P()),
+                       out_specs=bspec, check_rep=False)
     return jax.jit(fn)
 
 
@@ -242,12 +253,17 @@ class JaxTriangularSolver:
     def __init__(self, plan: FactorizePlan, fuse: bool = True,
                  fuse_buckets: bool = True, bucket_waste: float = 4.0,
                  jit_schedule: bool = True, executable_cache="default",
-                 layout: str = "native"):
+                 layout: str = "native", shard=None):
         if layout not in ("native", "planar"):
             raise ValueError(
                 f"layout must be 'native' or 'planar', got {layout!r} "
                 "(the solver has no dtype to resolve 'auto' against)")
         self.plan = plan
+        # scenario sharding for batched solves (see JaxFactorizer): single
+        # and multi-RHS kinds, and batches not divisible by the shard
+        # count, fall back to the unsharded runner
+        self.shard = shard if (shard is not None and shard.n_shards > 1) \
+            else None
         # planar: factor values arrive as (nnz, 2) / (B, nnz, 2) split re/im
         # planes; rhs and solution stay native complex at the interface
         self.layout = layout
@@ -261,6 +277,10 @@ class JaxTriangularSolver:
         # path; one per level group plus the rhs copy otherwise)
         self.last_n_dispatches = 0
         self._full_schedule = self._build_schedule(None, None)
+        if self.shard is not None:
+            # schedule index arrays are replicated once so the sharded
+            # runner never re-lays them out per call
+            self._full_schedule = self.shard.replicate(self._full_schedule)
         self._sparse_schedules: OrderedDict = OrderedDict()
 
     def _build_schedule(self, fwd_mask, bwd_mask):
@@ -402,6 +422,9 @@ class JaxTriangularSolver:
             bmask = np.zeros(n, dtype=bool)
             bmask[breach] = True
             fwd_groups, bwd_groups = self._build_schedule(fmask, bmask)
+            if self.shard is not None:
+                fwd_groups, bwd_groups = self.shard.replicate(
+                    (fwd_groups, bwd_groups))
             entry = (fwd_groups, bwd_groups, freach, breach)
         self._sparse_schedules[key] = entry
         while len(self._sparse_schedules) > self.SPARSE_SCHEDULE_CAP:
@@ -421,9 +444,15 @@ class JaxTriangularSolver:
         return fwd, bwd, key.hex()
 
     def _run_fused(self, kind: str, vals, x, fwd, bwd, sid: str):
+        shard = self.shard
+        if shard is not None and (kind != "batched"
+                                  or vals.shape[0] % shard.n_shards != 0):
+            shard = None
         runner = self._exec_cache.get_or_build(
-            ("trisolve", self.plan.digest, sid, kind, self.layout),
-            lambda: _build_trisolve_runner(kind, planar=self._planar))
+            ("trisolve", self.plan.digest, sid, kind,
+             None if shard is None else shard.descriptor, self.layout),
+            lambda: _build_trisolve_runner(kind, planar=self._planar,
+                                           shard=shard))
         out = runner(vals, x, tuple(fwd), tuple(bwd))
         self.last_n_dispatches = 1
         return out

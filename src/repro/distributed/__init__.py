@@ -1,3 +1,11 @@
+from .collectives import (
+    compressed_psum,
+    dequantize_int8,
+    fake_quantize_grads,
+    psum_exact,
+    quantize_int8,
+)
+from .scenario import ScenarioSharding, make_scenario_sharding, make_sweep_mesh
 from .sharding import (
     DEFAULT_RULES,
     axis_env,
@@ -10,9 +18,17 @@ from .sharding import (
 
 __all__ = [
     "DEFAULT_RULES",
+    "ScenarioSharding",
     "axis_env",
+    "compressed_psum",
+    "dequantize_int8",
+    "fake_quantize_grads",
     "logical_constraint",
     "make_rules",
+    "make_scenario_sharding",
+    "make_sweep_mesh",
+    "psum_exact",
+    "quantize_int8",
     "sharding_for_spec",
     "spec_struct",
     "tree_shardings",

@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["compressed_psum", "fake_quantize_grads", "quantize_int8", "dequantize_int8"]
+__all__ = ["compressed_psum", "fake_quantize_grads", "quantize_int8",
+           "dequantize_int8", "psum_exact"]
 
 
 def quantize_int8(x):
@@ -39,6 +40,16 @@ def compressed_psum(tree, axis_name: str):
         return total.astype(jnp.float32) * smax
 
     return jax.tree.map(leaf, tree)
+
+
+def psum_exact(tree, axis_name):
+    """Uncompressed psum over ``axis_name`` (use inside shard_map).
+
+    For small integer/scalar diagnostics — perturbation counts, ladder
+    escalation tallies — where quantisation loss is unacceptable and the
+    wire volume is a handful of scalars anyway.  ``axis_name`` may be a
+    single name or a tuple of mesh axes."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
 
 
 def fake_quantize_grads(tree):

@@ -1,0 +1,120 @@
+"""Scenario-axis sharding for the batched refactorize/solve engine.
+
+A sweep batch (Monte-Carlo copies, corners, AC frequencies) is embarrassingly
+parallel across scenarios: every batched kernel in the executor is a ``vmap``
+over the leading axis and every per-matrix reduction (``a_max``, pivot
+growth, backward error) stays within its own row.  ``ScenarioSharding``
+captures how that leading axis maps onto a device mesh via the ``"scenario"``
+entry of the logical-axis rules table (`sharding.DEFAULT_RULES`): value/rhs
+batches shard along the resolved mesh axes, while plan metadata (indices,
+scatter maps, bucket ladder) is replicated so each shard runs the full fused
+schedule on its slice — the ONE-dispatch property holds per shard.
+
+Resolution follows the same robustness rule as ``sharding._resolve``: axes
+missing from the mesh or of size 1 drop out, and a mesh that resolves to a
+single shard yields ``None`` (run unsharded — no shard_map overhead).
+Batch-divisibility is handled one level up (the GLU facade pads the batch);
+the runners themselves silently fall back to the unsharded executable when
+handed a non-divisible batch, mirroring the silent-replicate rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import DEFAULT_RULES
+
+__all__ = ["ScenarioSharding", "make_scenario_sharding", "make_sweep_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSharding:
+    """A mesh plus the axes the scenario (batch) dimension shards over."""
+
+    mesh: Mesh
+    axes: tuple
+
+    @property
+    def n_shards(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axes)
+
+    @property
+    def axis_names(self):
+        """Axis-name form accepted by ``lax.psum`` etc."""
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+    @property
+    def spec(self) -> P:
+        return P(self.axis_names)
+
+    @property
+    def batch_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec)
+
+    @property
+    def replicated_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    @property
+    def descriptor(self) -> tuple:
+        """Hashable identity for ExecutableCache keys — sharded and
+        unsharded runners (and runners on different meshes) never collide."""
+        shape = tuple((a, int(s)) for a, s in self.mesh.shape.items())
+        ids = tuple(int(d.id) for d in self.mesh.devices.flat)
+        return (shape, self.axes, ids)
+
+    def pad(self, batch: int) -> int:
+        """Smallest multiple of ``n_shards`` >= batch."""
+        k = self.n_shards
+        return ((batch + k - 1) // k) * k
+
+    def replicate(self, tree):
+        """Place every array leaf of ``tree`` replicated on the mesh."""
+        return jax.tree.map(
+            lambda x: jax.device_put(x, self.replicated_sharding), tree)
+
+    def shard_batch(self, x):
+        """Place a leading-axis batch array sharded along the scenario axes."""
+        return jax.device_put(x, self.batch_sharding)
+
+
+def make_scenario_sharding(mesh: Optional[Mesh],
+                           rules: Optional[dict] = None
+                           ) -> Optional[ScenarioSharding]:
+    """Resolve the ``"scenario"`` logical axis against ``mesh``.
+
+    Returns ``None`` when no mesh is given or the resolved shard count is 1
+    (callers treat that as "run unsharded").
+    """
+    if mesh is None:
+        return None
+    rules = rules if rules is not None else DEFAULT_RULES
+    ax = rules.get("scenario")
+    if ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    axes = tuple(a for a in axes if a in mesh.axis_names and mesh.shape[a] > 1)
+    if not axes:
+        return None
+    return ScenarioSharding(mesh=mesh, axes=axes)
+
+
+def make_sweep_mesh(n_devices: Optional[int] = None, devices=None) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the host's devices for scenario sweeps.
+
+    On CPU, emulate a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+    initialises).
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"requested {n_devices} devices, only {len(devs)} available")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), ("data",))

@@ -34,6 +34,7 @@ __all__ = [
 # logical name -> mesh axis (or tuple of axes, or None = replicate)
 DEFAULT_RULES: dict[str, object] = {
     "batch": ("pod", "data"),
+    "scenario": ("pod", "data"),  # batched-solver scenario axis (sweep copies)
     "seq": None,            # "model" enables sequence/context parallelism
     "kv_seq": None,         # "model" enables context-parallel decode
     "heads": "model",

@@ -1,0 +1,57 @@
+"""benchmarks.diff gate semantics: one-sided rows warn-and-skip (never
+gate), malformed rows are skipped defensively, and only gated-prefix
+regressions beyond the threshold fail."""
+import json
+
+from benchmarks.diff import diff, load_rows
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return str(p)
+
+
+def _row(name, us):
+    return {"name": name, "us_per_call": us, "derived": ""}
+
+
+def test_disjoint_rows_warn_and_skip(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", [_row("factorize_old_only", 10.0)])
+    new = _write(tmp_path, "new.json", [_row("sweep_sharded_d8", 99.0)])
+    assert diff(old, new) == 0
+    captured = capsys.readouterr()
+    assert captured.err.count("# WARN") == 2       # one removed, one added
+    assert "factorize_old_only" in captured.err
+    assert "sweep_sharded_d8" in captured.err
+
+
+def test_gated_regression_fails(tmp_path):
+    old = _write(tmp_path, "old.json", [_row("factorize_grid64", 10.0)])
+    new = _write(tmp_path, "new.json", [_row("factorize_grid64", 25.0)])
+    assert diff(old, new) == 1
+
+
+def test_ungated_regression_passes(tmp_path):
+    # sweep_sharded_ rows are informational — emulated multi-device timing
+    # is host-dependent, so a 10x swing must not fail the gate
+    old = _write(tmp_path, "old.json", [_row("sweep_sharded_d8", 10.0)])
+    new = _write(tmp_path, "new.json", [_row("sweep_sharded_d8", 100.0)])
+    assert diff(old, new) == 0
+
+
+def test_gated_within_threshold_passes(tmp_path):
+    old = _write(tmp_path, "old.json", [_row("factorize_grid64", 10.0)])
+    new = _write(tmp_path, "new.json", [_row("factorize_grid64", 12.0)])
+    assert diff(old, new) == 0
+
+
+def test_malformed_rows_skipped(tmp_path, capsys):
+    rows = [{"name": 1}, {"us_per_call": 3.0}, "not-a-dict",
+            _row("factorize_grid64", 10.0)]
+    path = _write(tmp_path, "weird.json", rows)
+    loaded = load_rows(path)
+    assert list(loaded) == ["factorize_grid64"]
+    assert capsys.readouterr().err.count("# WARN") == 3
+    good = _write(tmp_path, "good.json", [_row("factorize_grid64", 10.0)])
+    assert diff(path, good) == 0
