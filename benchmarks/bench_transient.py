@@ -2,8 +2,6 @@
 paper's target workload) — symbolic once, numeric per Newton iteration."""
 from __future__ import annotations
 
-import time
-
 from .common import row
 
 

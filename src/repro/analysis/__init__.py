@@ -1,0 +1,73 @@
+"""Static analysis of symbolic plans and built executor schedules.
+
+The subsystem proves — from first principles, against the filled matrix
+pattern — that a :class:`~repro.core.plan.FactorizePlan` and the schedules
+compiled from it are safe to run:
+
+* :func:`verify_plan` — recomputes the column dependency DAG from the
+  pattern (the *exact* hazard set of the level-synchronous executor, via
+  :func:`~repro.core.dependency.dependencies_exact`) and checks the
+  levelization against it, plus every index array the plan carries
+  (normalisation entries, update triples, A-scatter map, triangular-solve
+  schedules, reach closures).
+* :func:`verify_executor` / :func:`verify_trisolver` — walk the *built*
+  post-bucketing schedule groups step by step with an exact write/read
+  timing model, so bucket fusion and the dense tail are verified as
+  executed, not as planned.
+* :func:`audit_factorize` / :func:`audit_trisolve` — static jaxpr audit of
+  the fused single-dispatch runners: no host callbacks, donation contract
+  honoured, one dispatch.
+* :func:`verify_glu` — all of the above over a built :class:`~repro.core.
+  api.GLU`; this is what the ``GLU(verify=...)`` knob runs.
+
+Findings come back as a :class:`VerifyReport` of coded
+:class:`Violation` records (closed vocabulary in :data:`CODES`);
+:mod:`repro.analysis.mutate` provides the corruptors the fuzz suite uses
+to prove the detector has no false negatives.
+
+Run ``python -m repro.analysis.cli`` to sweep the benchmark matrix zoo.
+"""
+from __future__ import annotations
+
+from .invariants import verify_plan
+from .jaxpr_audit import CALLBACK_PRIMITIVES, audit_factorize, audit_trisolve
+from .mutate import MUTATIONS, merge_executor_steps, mutate_plan
+from .report import CODES, PlanVerificationError, VerifyReport, Violation
+from .schedule import verify_executor, verify_trisolver
+
+__all__ = [
+    "CODES",
+    "CALLBACK_PRIMITIVES",
+    "MUTATIONS",
+    "PlanVerificationError",
+    "VerifyReport",
+    "Violation",
+    "audit_factorize",
+    "audit_trisolve",
+    "merge_executor_steps",
+    "mutate_plan",
+    "verify_executor",
+    "verify_glu",
+    "verify_plan",
+    "verify_trisolver",
+]
+
+
+def verify_glu(glu, level: str = "full", *, reach_trials: int = 8,
+               seed: int = 0) -> VerifyReport:
+    """Verify a built :class:`~repro.core.api.GLU` instance.
+
+    ``level="plan"`` checks the symbolic plan only; ``"full"`` additionally
+    walks the built factorizer and trisolver schedules and audits the fused
+    runners' jaxprs.  Returns the merged :class:`VerifyReport`; raising on
+    violations is the caller's choice (``GLU(verify=...)`` raises).
+    """
+    if level not in ("plan", "full"):
+        raise ValueError(f"level must be 'plan' or 'full', got {level!r}")
+    rep = verify_plan(glu.symbolic_plan, reach_trials=reach_trials, seed=seed)
+    if level == "full":
+        rep.merge(verify_executor(glu._factorizer))
+        rep.merge(verify_trisolver(glu._solver))
+        rep.merge(audit_factorize(glu._factorizer))
+        rep.merge(audit_trisolve(glu._solver))
+    return rep

@@ -1,0 +1,214 @@
+"""Mutation corruptors for the verifier's own test suite.
+
+Each mutator injects ONE known violation class into a (copied) golden plan
+and returns the codes :func:`~repro.analysis.verify_plan` is guaranteed to
+raise for it — the fuzz suite then asserts zero false negatives (every
+injected corruption flagged with its code) and zero false positives
+(golden plans stay clean).  Collateral codes beyond the guaranteed set are
+expected: corrupting levels also desynchronises segments, and that is a
+real violation too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.dependency import Levelization, dependencies_exact
+from ..core.plan import FactorizePlan
+
+__all__ = ["MUTATIONS", "mutate_plan", "merge_executor_steps"]
+
+MUTATIONS = (
+    "swap_levels",
+    "fuse_dependent_pair",
+    "scatter_oob",
+    "scatter_collision",
+    "truncate_reach",
+    "corrupt_triple",
+    "drop_norm",
+)
+
+
+def _copy_plan(fplan: FactorizePlan) -> FactorizePlan:
+    """Independent deep copy: mutations must never leak into the golden
+    plan (it is reused across fuzz cases)."""
+    kw = {}
+    for f in dataclasses.fields(fplan):
+        v = getattr(fplan, f.name)
+        if isinstance(v, np.ndarray):
+            v = v.copy()
+        kw[f.name] = v
+    kw["levels"] = Levelization(fplan.levels.levels.copy(),
+                                fplan.levels.order.copy(),
+                                fplan.levels.level_ptr.copy())
+    kw["segments"] = [dataclasses.replace(s, cols=np.asarray(s.cols).copy())
+                      for s in fplan.segments]
+    return FactorizePlan(**kw)
+
+
+def _relevelize(levels: np.ndarray) -> Levelization:
+    order = np.argsort(levels, kind="stable").astype(np.int32)
+    nlev = int(levels.max()) + 1 if len(levels) else 0
+    counts = np.bincount(levels, minlength=nlev)
+    ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return Levelization(levels.astype(np.int32), order, ptr)
+
+
+def _pick_exact_edge(fplan: FactorizePlan, rng):
+    src, dst = dependencies_exact(fplan)
+    if not len(src):
+        raise ValueError("plan has no dependency edges to corrupt")
+    i = int(rng.integers(0, len(src)))
+    return int(src[i]), int(dst[i])
+
+
+def mutate_plan(fplan: FactorizePlan, kind: str, rng):
+    """Return ``(mutated_plan, guaranteed_codes, info)`` for one mutation
+    class.  ``rng`` is a ``numpy.random.Generator``."""
+    p = _copy_plan(fplan)
+    info = {}
+    if kind == "swap_levels":
+        s, d = _pick_exact_edge(p, rng)
+        lev = p.levels.levels.astype(np.int64)
+        ls, ld = int(lev[s]), int(lev[d])
+        lev2 = lev.copy()
+        lev2[lev == ls] = ld
+        lev2[lev == ld] = ls
+        p.levels = _relevelize(lev2)
+        info.update(src=s, dst=d)
+        return p, frozenset({"RACE_LEVEL_ORDER"}), info
+    if kind == "fuse_dependent_pair":
+        s, d = _pick_exact_edge(p, rng)
+        lev = p.levels.levels.astype(np.int64)
+        lev[d] = lev[s]
+        p.levels = _relevelize(lev)
+        info.update(src=s, dst=d)
+        return p, frozenset({"RACE_INTRA_LEVEL"}), info
+    if kind == "scatter_oob":
+        i = int(rng.integers(0, len(p.a_scatter)))
+        p.a_scatter[i] = p.nnz + 3
+        info.update(slot=i)
+        return p, frozenset({"SCATTER_OOB"}), info
+    if kind == "scatter_collision":
+        if len(p.a_scatter) < 2:
+            raise ValueError("need >= 2 A entries for a collision")
+        i = int(rng.integers(1, len(p.a_scatter)))
+        p.a_scatter[i] = p.a_scatter[i - 1]
+        info.update(slot=i)
+        return p, frozenset({"SCATTER_COLLISION"}), info
+    if kind == "truncate_reach":
+        return _truncate_reach(p, rng, info)
+    if kind == "corrupt_triple":
+        if not len(p.didx):
+            raise ValueError("plan has no update triples")
+        i = int(rng.integers(0, len(p.didx)))
+        # lidx[i] is a valid in-range entry of the SOURCE column — never
+        # the destination column the didx slot must address
+        p.didx[i] = p.lidx[i]
+        info.update(triple=i)
+        return p, frozenset({"TRIPLE_INCONSISTENT"}), info
+    if kind == "drop_norm":
+        if not len(p.norm_idx):
+            raise ValueError("plan has no normalisation entries")
+        i = int(rng.integers(0, len(p.norm_idx)))
+        p.norm_idx[i] = p.nnz
+        info.update(slot=i)
+        return p, frozenset({"NORM_OOB"}), info
+    raise ValueError(f"unknown mutation {kind!r}; one of {MUTATIONS}")
+
+
+def _truncate_reach(p: FactorizePlan, rng, info):
+    """Drop one L-adjacency entry.  Always REACH_ADJ_MISMATCH; when the
+    dropped row is reachable from the seed column ONLY through the dropped
+    edge, seeding the closure there also guarantees REACH_UNDER — the
+    search below prefers such a column and reports it in ``info``."""
+    ptr = p.l_adj_ptr.astype(np.int64)
+    counts = np.diff(ptr)
+    cands = np.flatnonzero(counts > 0)
+    if not len(cands):
+        raise ValueError("plan has no L adjacency to truncate")
+    indptr = p.indptr.astype(np.int64)
+    indices = p.indices.astype(np.int64)
+
+    def l_rows(j):
+        s, e = int(indptr[j]), int(indptr[j + 1])
+        rows = indices[s:e]
+        return rows[rows > j]
+
+    def reachable_without(seed_col, dropped):
+        seen = set()
+        stack = [int(r) for r in l_rows(seed_col) if r != dropped]
+        while stack:
+            j = stack.pop()
+            if j in seen:
+                continue
+            seen.add(j)
+            stack.extend(int(r) for r in l_rows(j))
+        return dropped in seen
+
+    order = rng.permutation(cands)
+    col = int(order[0])
+    guaranteed = frozenset({"REACH_ADJ_MISMATCH"})
+    for j in order.tolist():
+        dropped = int(p.l_adj_rows[ptr[j + 1] - 1])
+        if not reachable_without(j, dropped):
+            col = j
+            guaranteed = frozenset({"REACH_ADJ_MISMATCH", "REACH_UNDER"})
+            break
+    e = int(ptr[col + 1]) - 1
+    p.l_adj_rows = np.delete(p.l_adj_rows, e)
+    p.l_adj_ptr = ptr.copy()
+    p.l_adj_ptr[col + 1:] -= 1
+    info.update(seed_col=col, seed_sets=[[col]])
+    return p, guaranteed, info
+
+
+def merge_executor_steps(fact):
+    """Fuse two dependent scan steps of a built factorizer schedule into one
+    flat step — the bucket-merge bug class ``verify_executor`` exists to
+    catch.  Returns ``(kinds, group_arrays, guaranteed_codes)`` or ``None``
+    when no scan group spans an exact dependency edge (tiny schedules)."""
+    plan = fact.plan
+    src, dst = dependencies_exact(plan)
+    lev = plan.levels.levels.astype(np.int64)
+    # edges between adjacent levels, keyed by source level
+    adj = set()
+    for s, d in zip(lev[src], lev[dst]):
+        if d == s + 1:
+            adj.add(int(s))
+    level = 0
+    for gi, (kind, arrs) in enumerate(zip(fact._kinds, fact._group_arrays)):
+        if kind == "dense":
+            break
+        if kind in ("flat", "pallas"):
+            level += 1
+            continue
+        K = int(np.asarray(arrs[0]).shape[0])
+        for k in range(K - 1):
+            if (level + k) not in adj:
+                continue
+            a = [np.asarray(x) for x in arrs]
+            merged = tuple(
+                np.concatenate([x[k], x[k + 1]])[None, :] for x in a)
+            new_kinds, new_arrays = [], []
+            for gj, (kd, ar) in enumerate(zip(fact._kinds,
+                                              fact._group_arrays)):
+                if gj != gi:
+                    new_kinds.append(kd)
+                    new_arrays.append(ar)
+                    continue
+                if k > 0:
+                    head = tuple(x[:k] for x in a)
+                    new_kinds.append("scan" if k > 1 else "flat")
+                    new_arrays.append(head)
+                new_kinds.append("flat")
+                new_arrays.append(merged)
+                if k + 2 < K:
+                    tail = tuple(x[k + 2:] for x in a)
+                    new_kinds.append("scan" if K - k - 2 > 1 else "flat")
+                    new_arrays.append(tail)
+            return (tuple(new_kinds), tuple(new_arrays),
+                    frozenset({"EXEC_RACE"}))
+        level += K
+    return None

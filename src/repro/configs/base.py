@@ -8,7 +8,6 @@ model-parallel degree (Megatron-style padding; noted in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES"]
 

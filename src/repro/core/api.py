@@ -100,6 +100,7 @@ class GLU:
         plan_cache="default",
         layout: str = "auto",
         mesh=None,
+        verify: str = "off",
     ):
         """``mc64``: ``"scale"``/``True`` — full Duff-Koster max-product
         matching with Dr/Dc scalings; ``"structural"`` — zero-free diagonal
@@ -153,6 +154,14 @@ class GLU:
         diagnostics.  ``None`` (default) or a mesh resolving to one shard
         runs everything on the default device.  Single-matrix calls are
         never sharded.
+
+        ``verify``: static plan verification (:mod:`repro.analysis`).
+        ``"off"`` (default) — none, zero overhead; ``"plan"`` — verify the
+        symbolic plan's schedule/index invariants at construction;
+        ``"full"`` — additionally walk the built executor and trisolver
+        schedules and audit the fused runners' jaxprs.  Violations raise
+        :class:`~repro.analysis.PlanVerificationError`; the report summary
+        lands in ``solve_info["verify_report"]``.
         """
         plan, scaling, from_cache = plan_factorization(
             A, ordering=ordering, symbolic=symbolic, mc64=mc64,
@@ -165,7 +174,7 @@ class GLU:
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
             mode_override=mode_override, interpret=interpret, layout=layout,
-            mesh=mesh)
+            mesh=mesh, verify=verify)
 
     @classmethod
     def from_plan(
@@ -189,6 +198,7 @@ class GLU:
         interpret: bool = True,
         layout: str = "auto",
         mesh=None,
+        verify: str = "off",
     ) -> "GLU":
         """Build a GLU around a prebuilt :class:`SymbolicPlan`, skipping all
         symbolic work.
@@ -215,7 +225,7 @@ class GLU:
             static_pivot=static_pivot, refine=refine, refine_tol=refine_tol,
             dense_tail=dense_tail, dense_tail_density=dense_tail_density,
             mode_override=mode_override, interpret=interpret, layout=layout,
-            mesh=mesh)
+            mesh=mesh, verify=verify)
         return self
 
     def _setup(
@@ -240,6 +250,7 @@ class GLU:
         interpret: bool,
         layout: str,
         mesh=None,
+        verify: str = "off",
     ) -> None:
         # resolve the effective dtype ONCE; a float64/complex128 request
         # without x64 enabled raises here instead of silently degrading
@@ -314,6 +325,17 @@ class GLU:
                            else 4.0 * float(jnp.finfo(dtype).eps))
         self._info: Optional[dict] = None
         self._pending_stats = None
+        if verify not in ("off", "plan", "full"):
+            raise ValueError(
+                f"verify must be 'off', 'plan' or 'full', got {verify!r}")
+        self.verify = verify
+        self.verify_report = None
+        if verify != "off":
+            # lazy import: analysis depends on core, not the other way round
+            from ..analysis import verify_glu
+
+            self.verify_report = verify_glu(self, verify)
+            self.verify_report.raise_if_violated()
 
     # -- numeric phase (repeatable) -----------------------------------------
     def factorize(self, a_data=None) -> "GLU":
@@ -618,6 +640,9 @@ class GLU:
             "n_devices": self._shard.n_shards if sharded else 1,
             "batch_spec": str(self._shard.spec) if sharded else None,
             "n_perturbed_global": self._factorizer.last_n_perturbed_global,
+            # static-verification digest (None when verify="off")
+            "verify_report": (None if self.verify_report is None
+                              else self.verify_report.summary()),
         }
 
     def _set_solve_info(self, rinfo: dict) -> None:
@@ -630,7 +655,10 @@ class GLU:
                           "pallas_disabled_reason":
                               self._factorizer.pallas_disabled_reason,
                           "n_devices": 1, "batch_spec": None,
-                          "n_perturbed_global": None}
+                          "n_perturbed_global": None,
+                          "verify_report": (
+                              None if self.verify_report is None
+                              else self.verify_report.summary())}
         self._info.update(rinfo)
         self._info["solve_dispatches"] = self._solver.last_n_dispatches
 
@@ -683,7 +711,7 @@ class GLU:
             self._pending_stats = None
         out = {}
         for key, v in self._info.items():
-            if v is None or isinstance(v, (bool, int, float, str)):
+            if v is None or isinstance(v, (bool, int, float, str, dict)):
                 out[key] = v
             else:
                 a = np.asarray(v)

@@ -29,6 +29,7 @@ __all__ = [
     "dependencies_upattern",
     "dependencies_relaxed",
     "dependencies_doubleu",
+    "dependencies_exact",
     "levelize",
     "levelize_relaxed",
     "level_stats",
@@ -116,6 +117,45 @@ def dependencies_doubleu(As: FilledPattern) -> tuple[np.ndarray, np.ndarray]:
                 src.append(int(i))
                 dst.append(int(t))
     return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64)
+
+
+def dependencies_exact(As: FilledPattern) -> tuple[np.ndarray, np.ndarray]:
+    """Exact hazard set of the level-synchronous right-looking executor.
+
+    Source column j — with L rows R(j) = {r > j : As(r,j) != 0} and U-row
+    targets K(j) = {k > j : As(j,k) != 0} — writes the entries (r, k) for
+    every (r, k) in R(j) x K(j).  The written entry belongs to column
+    max(r, k) and is consumed at the level of column min(r, k): the
+    normalisation of min(r,k) when r >= k, the update sourced at row r when
+    r < k.  Deduplicating j -> min(r, k) over the cross product gives
+
+        { j -> k : k in K(j), k <= max R(j) }  ∪
+        { j -> r : r in R(j), r < max K(j) }
+
+    — O(nnz) edges, a strict subset of the relaxed rule (which takes ALL of
+    K(j) and R(j)); the j -> r edges with As(j, r) == 0 are exactly the
+    double-U hazards GLU1.0 misses.  Any levelization is a valid schedule
+    for the executor iff every one of these edges is strictly
+    level-forward — which is what ``repro.analysis.verify_plan`` checks.
+    """
+    n = As.n
+    indptr = As.indptr.astype(np.int64)
+    rows = As.indices.astype(np.int64)
+    cols = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    low = rows > cols                       # L entries (r, j)
+    maxR = np.full(n, -1, dtype=np.int64)
+    np.maximum.at(maxR, cols[low], rows[low])
+    indptr_t, indices_t, _ = csc_transpose_pattern(n, As.indptr, As.indices)
+    rws = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr_t))
+    kcols = indices_t.astype(np.int64)
+    upr = kcols > rws                       # U entries (j, k)
+    maxK = np.full(n, -1, dtype=np.int64)
+    np.maximum.at(maxK, rws[upr], kcols[upr])
+    m1 = upr & (kcols <= maxR[rws])         # j -> k, consumed by norm of k
+    m2 = low & (rows < maxK[cols])          # j -> r, consumed by source r
+    src = np.concatenate([rws[m1], cols[m2]])
+    dst = np.concatenate([kcols[m1], rows[m2]])
+    return src, dst
 
 
 def _levels_to_levelization(levels: np.ndarray) -> Levelization:

@@ -93,6 +93,12 @@ class ExecutableCache:
         with self._lock:
             self._fns.clear()
 
+    def keys(self) -> list:
+        """Snapshot of the cached keys, most recently used last (the jaxpr
+        audit uses this to locate a solver's fused runner)."""
+        with self._lock:
+            return list(self._fns)
+
     def __len__(self) -> int:
         return len(self._fns)
 

@@ -216,6 +216,14 @@ class FactorizePlan:
         """2 flops per MAC update + 1 per normalisation division."""
         return 2 * len(self.lidx) + len(self.norm_idx)
 
+    def verify(self, pattern=None, **kwargs):
+        """Run the static plan sanitizer (:func:`repro.analysis.verify_plan`)
+        on this plan and return the :class:`~repro.analysis.VerifyReport`.
+        The plan's own filled pattern is the default reference."""
+        from ..analysis import verify_plan   # lazy: analysis imports core
+
+        return verify_plan(self, pattern, **kwargs)
+
     def level_shape_buckets(self, max_waste: float = 4.0) -> dict:
         """Per-dimension pad-bucket ladders from the plan's level-shape
         histogram: ``norm`` (normalisation entries), ``upd`` (update

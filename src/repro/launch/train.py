@@ -21,7 +21,6 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import get_config
 from ..data.pipeline import TokenPipeline

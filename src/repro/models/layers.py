@@ -13,7 +13,7 @@ Conventions
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -242,7 +242,6 @@ def mla_specs(cfg) -> Params:
 def mla_attention(p: Params, x: jnp.ndarray, cfg, *, positions, mode="causal",
                   cache: Optional[dict] = None) -> tuple:
     B, S, d = x.shape
-    H = cfg.num_heads
     r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
 
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])

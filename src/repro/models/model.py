@@ -24,7 +24,6 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..distributed.sharding import logical_constraint as lc
 from . import layers as L

@@ -21,7 +21,7 @@ import json
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import zlib
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import signal
 import threading
-import time
 
 __all__ = ["PreemptionGuard", "StepWatchdog"]
 

@@ -8,8 +8,6 @@ Both support global-norm clipping and a linear-warmup cosine schedule.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

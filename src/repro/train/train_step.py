@@ -10,8 +10,6 @@ scale before crossing the wire — see distributed/collectives.py.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

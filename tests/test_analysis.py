@@ -1,0 +1,192 @@
+"""Plan sanitizer: golden plans verify clean, the exact dependency rule is
+bracketed by the known-sound rules, and the jaxpr audit enforces the
+dispatch/donation contracts."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    CODES,
+    PlanVerificationError,
+    VerifyReport,
+    audit_factorize,
+    audit_trisolve,
+    verify_executor,
+    verify_glu,
+    verify_plan,
+    verify_trisolver,
+)
+from repro.core import (
+    GLU,
+    dependencies_doubleu,
+    dependencies_exact,
+    dependencies_relaxed,
+    dependencies_upattern,
+    symbolic_fillin_gp,
+)
+from repro.sparse import circuit_jacobian, make_suite_matrix
+
+
+@pytest.fixture(scope="module")
+def A():
+    return make_suite_matrix("rajat12_like", scale=0.2, seed=3)
+
+
+@pytest.fixture(scope="module")
+def glu(A):
+    g = GLU(A)
+    g.factorize()
+    return g
+
+
+# -- golden plans verify clean across the executor matrix ---------------------
+
+@pytest.mark.parametrize(
+    "symbolic,fuse,dense",
+    list(itertools.product(["gp", "vectorized"], [True, False], [True, False])))
+def test_golden_plan_verifies(A, symbolic, fuse, dense):
+    g = GLU(A, symbolic=symbolic, fuse_buckets=fuse, dense_tail=dense)
+    rep = verify_glu(g, "full")
+    assert rep.ok, str(rep)
+    # every layer of the verifier actually ran
+    for check in ("pattern", "races", "norm", "triples", "scatter",
+                  "trisolve_fwd", "trisolve_bwd", "reach", "exec_schedule",
+                  "trisolve_schedule", "audit_factorize", "audit_trisolve"):
+        assert check in rep.checks
+
+
+def test_symbolic_plan_verify_method(glu):
+    rep = glu.symbolic_plan.verify()
+    assert isinstance(rep, VerifyReport)
+    assert rep.ok
+
+
+def test_factorize_plan_verify_method(glu):
+    rep = glu.plan.verify()
+    assert isinstance(rep, VerifyReport)
+    assert rep.ok
+
+
+def test_verify_plan_accepts_fplan_with_pattern(glu):
+    plan = glu.symbolic_plan
+    rep = verify_plan(plan.fplan, (plan.perm_indptr, plan.perm_indices))
+    assert rep.ok, str(rep)
+
+
+# -- the exact dependency rule ------------------------------------------------
+
+def _edge_set(src, dst):
+    return set(zip(src.tolist(), dst.tolist()))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_exact_edges_bracketed(seed):
+    A = circuit_jacobian(60, avg_degree=3.0, seed=seed, asym=0.5)
+    As = symbolic_fillin_gp(A)
+    exact = _edge_set(*dependencies_exact(As))
+    upat = _edge_set(*dependencies_upattern(As))
+    doubleu = _edge_set(*dependencies_doubleu(As))
+    relaxed = _edge_set(*dependencies_relaxed(As))
+    # the executor's true hazard set contains every U-pattern edge and every
+    # double-U hazard, and never exceeds the relaxed (sound) superset
+    assert upat <= exact
+    assert doubleu <= exact
+    assert exact <= relaxed
+
+
+def test_exact_edges_are_forward():
+    A = circuit_jacobian(80, avg_degree=3.5, seed=7)
+    As = symbolic_fillin_gp(A)
+    src, dst = dependencies_exact(As)
+    assert np.all(src < dst)
+
+
+# -- jaxpr audit: dispatch + donation contracts -------------------------------
+
+def test_audit_factorize_filled_donates(glu):
+    rep = audit_factorize(glu._factorizer, entry="filled")
+    assert rep.ok, str(rep)
+
+
+def test_audit_factorize_scatter_no_donation(glu):
+    rep = audit_factorize(glu._factorizer, entry="scatter")
+    assert rep.ok, str(rep)
+
+
+def test_audit_trisolve_no_donation(glu):
+    rep = audit_trisolve(glu._solver)
+    assert rep.ok, str(rep)
+
+
+def test_audit_flags_unfused_dispatch(A):
+    g = GLU(A, jit_schedule=False)
+    rep = audit_factorize(g._factorizer)
+    assert rep.codes == {"AUDIT_DISPATCH"}
+    rep = audit_trisolve(g._solver)
+    assert rep.codes == {"AUDIT_DISPATCH"}
+
+
+# -- the GLU(verify=...) knob -------------------------------------------------
+
+def test_glu_verify_full_records_report(A):
+    g = GLU(A, verify="full")
+    assert g.verify_report is not None and g.verify_report.ok
+    g.factorize()
+    info = g.solve_info
+    assert info["verify_report"]["ok"] is True
+    assert info["verify_report"]["n_violations"] == 0
+
+
+def test_glu_verify_plan_level(A):
+    g = GLU(A, verify="plan")
+    assert g.verify_report.ok
+    # plan level must not trace the runners
+    assert "audit_factorize" not in g.verify_report.checks
+
+
+def test_glu_verify_off_is_default(glu):
+    assert glu.verify == "off"
+    assert glu.verify_report is None
+    assert glu.solve_info["verify_report"] is None
+
+
+def test_glu_verify_rejects_unknown_value(A):
+    with pytest.raises(ValueError, match="verify"):
+        GLU(A, verify="maybe")
+
+
+# -- report mechanics ---------------------------------------------------------
+
+def test_report_raise_and_summary():
+    rep = VerifyReport()
+    rep.ran("races")
+    rep.add("RACE_INTRA_LEVEL", "col 3 and 4 share level 2", src=3, dst=4)
+    assert not rep.ok
+    assert rep.codes == {"RACE_INTRA_LEVEL"}
+    s = rep.summary()
+    assert s["ok"] is False and s["codes"] == ["RACE_INTRA_LEVEL"]
+    with pytest.raises(PlanVerificationError, match="RACE_INTRA_LEVEL"):
+        rep.raise_if_violated()
+
+
+def test_report_caps_per_code():
+    rep = VerifyReport()
+    for i in range(VerifyReport.MAX_PER_CODE + 5):
+        rep.add("NORM_OOB", f"slot {i}")
+    assert len(rep.violations) == VerifyReport.MAX_PER_CODE
+    assert rep.violations[0].context["suppressed"] == 5
+
+
+def test_unknown_code_rejected():
+    rep = VerifyReport()
+    with pytest.raises(ValueError, match="unknown violation code"):
+        rep.add("NOT_A_CODE", "nope")
+    assert all(c in CODES for c in rep.codes)
+
+
+# -- executed-schedule checks accept hand-fed overrides -----------------------
+
+def test_verify_executor_and_trisolver_defaults(glu):
+    assert verify_executor(glu._factorizer).ok
+    assert verify_trisolver(glu._solver).ok

@@ -1,6 +1,5 @@
 """Checkpointing: roundtrip, integrity, retention, resume."""
 import json
-from pathlib import Path
 
 import numpy as np
 import pytest

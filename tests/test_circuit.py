@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.circuit import Circuit, rc_grid_circuit, transient, transient_sweep
-from repro.circuit.simulate import A_mul
 
 
 def test_resistor_divider_dc():

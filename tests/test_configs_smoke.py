@@ -1,12 +1,11 @@
 """Per-architecture smoke tests (deliverable f): reduced config, one forward
 and one train step on CPU, asserting output shapes and finiteness."""
-import numpy as np
 import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, list_archs, shape_cells
+from repro.configs import get_config, list_archs, shape_cells
 from repro.models import forward_train, init_params
 from repro.train import OptConfig, TrainConfig, init_opt_state, make_train_step
 

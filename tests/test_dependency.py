@@ -13,7 +13,7 @@ from repro.core import (
     longest_path_levels,
     symbolic_fillin_gp,
 )
-from repro.sparse import circuit_jacobian, csc_from_coo, grid_laplacian
+from repro.sparse import circuit_jacobian, csc_from_coo
 
 
 def _levels_reference(n, src, dst):

@@ -16,7 +16,7 @@ from repro.core import (
     symbolic_fillin_gp,
     trisolve_numpy,
 )
-from repro.sparse import circuit_jacobian, grid_laplacian
+from repro.sparse import circuit_jacobian
 
 
 @pytest.fixture(scope="module")

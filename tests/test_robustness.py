@@ -390,7 +390,7 @@ def test_refined_masked_iters_match_early_stop_semantics():
     A = ill_conditioned_jacobian(150, decades=10.0, seed=4)
     glu = GLU(A, refine=4).factorize()
     b = np.random.default_rng(4).standard_normal(A.n)
-    x = glu.solve(b)
+    glu.solve(b)
     info = glu.solve_info
     assert info["converged"]
     assert 0 <= info["refine_iters"] <= 4

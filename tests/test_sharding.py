@@ -4,11 +4,8 @@ import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
-import pytest
-
 from repro.configs import get_config
-from repro.distributed.sharding import DEFAULT_RULES, make_rules
+from repro.distributed.sharding import make_rules
 
 
 def test_make_rules_respects_attn_tp():

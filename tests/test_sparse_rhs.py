@@ -21,7 +21,6 @@ from repro.core import GLU
 from repro.core.plan import reach_closure
 from repro.core.triangular import trisolve_numpy
 from repro.sparse import circuit_jacobian
-from repro.sparse.csc import CSC
 
 
 @pytest.fixture(scope="module")
@@ -191,7 +190,7 @@ def test_glu_solve_multi_end_to_end():
         assert r < 1e-10
         assert np.array_equal(X[k], glu.solve(B[k]))
     # refined many-RHS path
-    X_ref = glu.solve_multi(B, refine=2)
+    glu.solve_multi(B, refine=2)
     info = glu.solve_info
     assert np.asarray(info["converged"]).all()
     assert np.asarray(info["backward_error"]).shape == (K,)
